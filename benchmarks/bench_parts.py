@@ -1,0 +1,65 @@
+"""Paper Figs 4.1/4.2/4.3 analogue: per-part load distribution.
+
+Times each algorithm part separately (as the paper profiles its serial
+and parallel fsparse) and reports each part's share of the total —
+the quantity Figs 4.1/4.2 plot.  ``derived`` carries the fractions.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.assemble import (
+    part1_count_rows,
+    part2_rank,
+    part3_unique,
+    part4_finalize,
+    postprocess,
+)
+from repro.core.ransparse import dataset
+
+from .common import row, time_fn
+
+
+def run(scale: float = 0.1):
+    out = []
+    for k in (1, 2, 3):
+        ii, jj, ss, siz = dataset(k, seed=7, scale=scale)
+        rows_z = jnp.asarray((ii - 1).astype(np.int32))
+        cols_z = jnp.asarray((jj - 1).astype(np.int32))
+        vals = jnp.asarray(ss.astype(np.float32))
+        M = N = siz
+        L = len(ii)
+
+        p1 = jax.jit(lambda r: part1_count_rows(r, M))
+        p2 = jax.jit(lambda r: part2_rank(r, M))
+        rank = p2(rows_z)
+        p3 = jax.jit(lambda r, c, rk: part3_unique(r, c, rk, M, N))
+        perm, first, jc_counts, r_s, c_s, valid = p3(rows_z, cols_z, rank)
+        p4 = jax.jit(part4_finalize)
+        jcS, irankP, nnz = p4(first, jc_counts)
+        post = jax.jit(
+            lambda v, rs, ir, f, vl, pm: postprocess(v, rs, ir, f, vl, pm, L, M)
+        )
+
+        t1 = time_fn(p1, rows_z)
+        t2 = time_fn(p2, rows_z)
+        t3 = time_fn(p3, rows_z, cols_z, rank)
+        t4 = time_fn(p4, first, jc_counts)
+        tp = time_fn(post, vals, r_s, irankP, first, valid, perm)
+        total = t1 + t2 + t3 + t4 + tp
+        fr = lambda t: round(t / total, 3)
+        out.append(row(
+            f"parts_set{k}_total", total, L=L,
+            part1=fr(t1), part2=fr(t2), part3=fr(t3), part4=fr(t4),
+            post=fr(tp),
+        ))
+        for nm, t in [("part1", t1), ("part2", t2), ("part3", t3),
+                      ("part4", t4), ("post", tp)]:
+            out.append(row(f"parts_set{k}_{nm}", t, frac=fr(t)))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper §4.3 STREAM-copy analogue: the bandwidth roof for assembly.
+
+The paper cites a parallel copy reaching 4.3x (6 cores) / 6.3x (16
+cores) — the ceiling any memory-bound kernel can hit.  We measure the
+achieved copy bandwidth of this host and the equivalent assembly
+bandwidth (bytes-touched / time) — their ratio is the container-level
+"fraction of STREAM roof", the wall-clock cousin of §Roofline's memory
+term.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import assemble_fused
+from repro.core.ransparse import dataset
+
+from .common import row, time_fn
+
+
+def run(n: int = 20_000_000, scale: float = 0.1):
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a + 0.0)
+    t_us = time_fn(copy, x)
+    bw = 2 * 4 * n / (t_us * 1e-6) / 1e9  # read + write
+    out = [row("stream_copy", t_us, GBps=round(bw, 2), N=n)]
+
+    ii, jj, ss, siz = dataset(1, seed=5, scale=scale)
+    r = jnp.asarray((ii - 1).astype(np.int32))
+    c = jnp.asarray((jj - 1).astype(np.int32))
+    v = jnp.asarray(ss.astype(np.float32))
+    L = len(ii)
+    t_asm = time_fn(lambda: assemble_fused(r, c, v, M=siz, N=siz))
+    # Table 2.1: ~13L element accesses x 4B is the algorithmic traffic
+    asm_bw = 13 * L * 4 / (t_asm * 1e-6) / 1e9
+    out.append(row(
+        "assembly_effective_bw", t_asm, GBps=round(asm_bw, 2),
+        frac_of_stream=round(asm_bw / bw, 3), L=L,
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Table 4.2 analogue: overall assembly time, 3 ransparse data sets.
+
+Columns of the paper: Matlab `sparse` vs fsparse serial vs parallel.
+CPU-container mapping (TPU is the target, wall-clock is indicative):
+  matlab   -> NumPy lexsort oracle (Matlab's quicksort-based sparse)
+  serial   -> our two-pass counting assembly (jit, 1 device)
+  fused    -> beyond-paper single fused-key pass
+Derived column reports the speedup over the oracle, the paper's metric.
+Data sets are scaled by --scale (default 0.1 -> 250k raw elements) to
+keep the CPU container honest; ratios are scale-free to first order.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import assemble_arrays, assemble_fused
+from repro.core.oracle import matlab_sparse_oracle
+from repro.core.ransparse import DATA_SETS, dataset
+
+from .common import row, time_fn, time_host_fn
+
+
+def run(scale: float = 0.1):
+    rows = []
+    for k in (1, 2, 3):
+        ii, jj, ss, siz = dataset(k, seed=42, scale=scale)
+        rows_z = (ii - 1).astype(np.int32)
+        cols_z = (jj - 1).astype(np.int32)
+        vals = ss.astype(np.float32)
+        M = N = siz
+        L = len(ii)
+
+        t_oracle = time_host_fn(
+            lambda: matlab_sparse_oracle(rows_z, cols_z, vals, M, N)
+        )
+        r_d, c_d, v_d = jnp.asarray(rows_z), jnp.asarray(cols_z), jnp.asarray(vals)
+        t_serial = time_fn(
+            lambda: assemble_arrays(r_d, c_d, v_d, M=M, N=N)
+        )
+        t_fused = time_fn(
+            lambda: assemble_fused(r_d, c_d, v_d, M=M, N=N)
+        )
+        nnz = int(assemble_arrays(r_d, c_d, v_d, M=M, N=N).nnz)
+        rows.append(row(
+            f"table42_set{k}_oracle", t_oracle,
+            L=L, size=siz, nnz=nnz, speedup=1.0,
+        ))
+        rows.append(row(
+            f"table42_set{k}_serial", t_serial,
+            speedup=round(t_oracle / t_serial, 2),
+        ))
+        rows.append(row(
+            f"table42_set{k}_fused", t_fused,
+            speedup=round(t_oracle / t_fused, 2),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark utilities: timing + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (the harness
+contract).  ``derived`` carries the paper-analogue quantity (speedup,
+fraction, bytes, ...) as ``key=value|key=value``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def time_host_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, **derived) -> str:
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us:.1f},{d}"
+    print(line)
+    return line

@@ -1,0 +1,84 @@
+"""Assemble EXPERIMENTS.md tables from dry-run + roofline artifacts.
+
+  python -m benchmarks.report --dryrun experiments/dryrun \
+      --roofline experiments/roofline > experiments/tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(d: str) -> str:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(fn))
+        if r["status"] == "ok":
+            m = r["memory"]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r['compile_s']:.0f}s | {_gib(m['argument_bytes'])} | "
+                f"{_gib(m['temp_bytes'])} | {r['flops']:.2e} | "
+                f"{r['bytes_accessed']:.2e} | "
+                f"{r['collectives']['total_bytes']:.2e} |"
+            )
+        else:
+            why = r.get("reason", r.get("error", ""))[:60]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | - | - | - | - | - | {why} |"
+            )
+    head = (
+        "| arch | shape | mesh | status | compile | args GiB/dev | "
+        "temp GiB/dev | flops/dev | hbm bytes/dev | coll bytes/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    return head + "\n".join(rows)
+
+
+def roofline_table(d: str) -> str:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(fn))
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | "
+                f"{r['status']} | - | - |"
+            )
+            continue
+        t = r["terms_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.2e} | "
+            f"{t['memory']:.2e} | {t['collective']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_fraction']:.2f} | "
+            f"{r['mfu_bound'] * 100:.1f}% |"
+        )
+    head = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful (6ND/HLO) | MFU bound |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    return head + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--roofline", default="experiments/roofline")
+    args = ap.parse_args()
+    print("## Dry-run table (single-pod 16x16 = 256 chips; "
+          "multi = 2x16x16 = 512)\n")
+    print(dryrun_table(args.dryrun))
+    print("\n## Roofline table (single-pod, per-device terms; "
+          "v5e: 197TF/s, 819GB/s HBM, 50GB/s ICI)\n")
+    print(roofline_table(args.roofline))
+
+
+if __name__ == "__main__":
+    main()

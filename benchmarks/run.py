@@ -1,0 +1,58 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  python -m benchmarks.run [--scale 0.1]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+  bench_table42        Table 4.2   overall speedup vs Matlab-oracle
+  bench_parts          Figs 4.1-4.3 per-part load distribution
+  bench_access_counts  Tables 2.1/3.1 memory-access complexity
+  bench_stream         §4.3 STREAM bandwidth roof
+  bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
+  bench_spmv           §1 motivating FEM assemble+solve cycle
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1,
+                    help="ransparse data-set scale (1.0 = paper's 2.5M)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (
+        bench_access_counts,
+        bench_moe_dispatch,
+        bench_parts,
+        bench_spmv,
+        bench_stream,
+        bench_table42,
+    )
+
+    benches = {
+        "table42": lambda: bench_table42.run(scale=args.scale),
+        "parts": lambda: bench_parts.run(scale=args.scale),
+        "access_counts": lambda: bench_access_counts.run(),
+        "stream": lambda: bench_stream.run(scale=args.scale),
+        "moe_dispatch": lambda: bench_moe_dispatch.run(),
+        "spmv": lambda: bench_spmv.run(),
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, e))
+            print(f"{name},-1,error={type(e).__name__}:{e}", file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

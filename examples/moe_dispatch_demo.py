@@ -1,0 +1,60 @@
+"""The paper's algorithm as MoE routing — visual demo.
+
+Shows that expert dispatch IS sparse assembly: the (token, expert, gate)
+triplets run through the same Part-1/Part-2 counting machinery as the
+Matlab `sparse` reproduction, and the combine is the duplicate-summing
+post-processing.
+
+    PYTHONPATH=src python examples/moe_dispatch_demo.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.moe import init_moe, moe_dispatch_indices, moe_ffn
+
+cfg = get_config("olmoe_1b_7b").reduced(d_model=64, dtype="float32")
+E, K = cfg.moe.n_experts, cfg.moe.top_k
+print(f"OLMoE-style reduced MoE: {E} experts, top-{K}")
+
+rng = np.random.default_rng(0)
+params = init_moe(jax.random.key(0), cfg)
+x = jnp.asarray(rng.normal(size=(2, 16, 64)), jnp.float32)
+
+# --- routing triplets: exactly the paper's (i, j, s) -------------------
+logits = jnp.einsum("bsd,de->bse", x, params["router"])
+gates, experts = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+T = 2 * 16
+print(f"routing produced {T * K} triplets (token, expert, gate) — "
+      f"this is COO data with {E} columns")
+
+# --- Part 1+2: histogram + counting-sort placement ---------------------
+slot, load = moe_dispatch_indices(
+    experts.reshape(-1).astype(jnp.int32), n_experts=E,
+    capacity=int(1.25 * K * T / E),
+)
+print("expert load histogram (Part 1, private counters):")
+print("  ", np.asarray(load))
+drops = int(jnp.sum(slot >= E * int(1.25 * K * T / E)))
+print(f"capacity-cropped (the 'nzmax' overflow): {drops} / {T * K}")
+
+# --- the full layer: dispatch -> expert FFNs -> duplicate-summing combine
+y, aux = moe_ffn(params, x, cfg)
+print(f"combine output: {y.shape}, aux load-balance loss {float(aux):.4f}")
+
+# --- exactness: compare one token against looping over its experts -----
+t = 5
+xt = x.reshape(T, 64)[t]
+yref = np.zeros(64)
+for kk in range(K):
+    e = int(experts.reshape(T, K)[t, kk])
+    g = float((gates / gates.sum(-1, keepdims=True)).reshape(T, K)[t, kk])
+    hg = np.asarray(xt) @ np.asarray(params["gate_ein"])[e]
+    hu = np.asarray(xt) @ np.asarray(params["up_ein"])[e]
+    act = hg / (1 + np.exp(-hg)) * hu
+    yref += g * (act @ np.asarray(params["down_eout"])[e])
+err = np.abs(np.asarray(y).reshape(T, 64)[t] - yref).max()
+print(f"token {t}: fsparse-dispatch vs per-expert loop err = {err:.2e}")
+assert err < 1e-4
+print("OK — MoE dispatch is the paper's assembly, end to end.")

@@ -1,0 +1,79 @@
+"""End-to-end training driver: a ~100M-parameter LM, few hundred steps.
+
+This is the deliverable-(b) end-to-end example.  The default preset is
+a ~108M dense model (olmo-family: 8L x d768 x 12H, vocab 50304, seq 512)
+trained for 300 steps with the full production stack: sharded params,
+microbatch accumulation, bf16 grad compression + error feedback, AdamW,
+async checkpointing, resumable data pipeline.
+
+On a TPU slice this preset runs as-is (the launcher picks up all local
+devices).  On the CPU CI container use ``--preset tiny`` (~1.5M params)
+which finishes in ~2 minutes; ``--preset full`` is the 100M run.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny
+    PYTHONPATH=src python examples/train_lm.py --preset full --steps 300
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch import train as train_launch
+
+
+PRESETS = {
+    # ~108M params: 8L d768 12H ff3072 vocab 50304 (tied embeddings)
+    "full": dict(n_layers=8, d_model=768, n_heads=12, n_kv_heads=12,
+                 d_ff=3072, vocab=50304, head_dim=64),
+    # ~14M params: CI-scale but same code path
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+                  d_ff=1024, vocab=8192, head_dim=32),
+    # ~1.5M params: smoke
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                 d_ff=512, vocab=2048, head_dim=32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    overrides = PRESETS[args.preset]
+    base = get_config("olmo_1b")
+    cfg = dataclasses.replace(base, **overrides)
+    n = cfg.n_params
+    print(f"[example] preset={args.preset}: ~{n/1e6:.1f}M params")
+
+    steps = args.steps or {"full": 300, "small": 300, "tiny": 200}[args.preset]
+    batch = args.batch or {"full": 32, "small": 16, "tiny": 8}[args.preset]
+    seq = args.seq or {"full": 512, "small": 256, "tiny": 128}[args.preset]
+
+    # reuse the production launcher by monkey-pointing its config lookup
+    import repro.configs as configs_mod
+    orig = configs_mod.get_config
+    configs_mod.get_config = lambda name: cfg if name == "example" else orig(name)
+    train_launch.get_config = configs_mod.get_config
+    try:
+        return train_launch.main([
+            "--arch", "example",
+            "--steps", str(steps),
+            "--batch", str(batch),
+            "--seq", str(seq),
+            "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "20",
+        ])
+    finally:
+        configs_mod.get_config = orig
+
+
+if __name__ == "__main__":
+    sys.exit(main())

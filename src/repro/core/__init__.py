@@ -1,0 +1,40 @@
+"""repro.core — the paper's sparse assembly as a composable JAX module."""
+from .assemble import (
+    AssemblyIntermediate,
+    assemble,
+    assemble_arrays,
+    assemble_fused,
+    assembly_intermediates,
+    part1_count_rows,
+    part2_rank,
+    part3_unique,
+    part4_finalize,
+)
+from .coo import COO, coo_from_matlab, coo_to_dense
+from .csc import CSC, csc_to_dense, spmv, spmv_t
+from .fsparse import fsparse, fsparse_coo
+from .ransparse import DATA_SETS, dataset, ransparse
+
+__all__ = [
+    "AssemblyIntermediate",
+    "COO",
+    "CSC",
+    "DATA_SETS",
+    "assemble",
+    "assemble_arrays",
+    "assemble_fused",
+    "assembly_intermediates",
+    "coo_from_matlab",
+    "coo_to_dense",
+    "csc_to_dense",
+    "dataset",
+    "fsparse",
+    "fsparse_coo",
+    "part1_count_rows",
+    "part2_rank",
+    "part3_unique",
+    "part4_finalize",
+    "ransparse",
+    "spmv",
+    "spmv_t",
+]

@@ -1,0 +1,270 @@
+"""The paper's index-based sparse assembly, adapted to XLA/TPU.
+
+Structure follows the paper's four parts exactly (§2.3):
+
+  Part 1  count rows            -> pessimistic row pointer ``jrS``
+  Part 2  counting-sort rank    -> row-ordered traversal order ``rank``
+  Part 3  uniqueness            -> per-column dedup; ``irank`` slots
+  Part 4  finalize              -> accumulated ``jcS``; rebased ``irank``
+  Post    scatter/reduce        -> ``(prS, irS, jcS)``
+
+TPU adaptation (see DESIGN.md §2): the serial ``hcol`` last-seen-row
+cache of Part 3 is replaced by a *second stable counting-sort pass over
+columns* followed by adjacent-compare boundary detection — identical
+output ordering (rows ascending within each column, exactly what the
+row-ordered traversal + per-column counters produce), O(L) work, fully
+vectorizable.  The placement loop ``rank[jrS[ii[i]]++] = i`` of Part 2
+is realized as prior-equal-key counting (see ``kernels/counting_sort``
+for the MXU one-hot/triangular-matmul version; the pure-jnp path here
+uses XLA's stable sort which yields the identical permutation).
+
+Everything is jit-compatible with static shapes: the output CSC has
+capacity ``nzmax`` (default ``L``) and carries true ``nnz`` as a traced
+scalar; padding slots hold ``row == M`` sentinels and zero values.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .coo import COO
+from .csc import CSC
+
+
+class AssemblyIntermediate(NamedTuple):
+    """The paper's intermediate format (Listing 3 / Listing 8).
+
+    ``rank``   : row-ordered traversal permutation (Part 2)
+    ``perm``   : full (col,row)-ordered permutation = rank[rank2]
+    ``irankP`` : output slot of the k-th element of the *sorted* stream
+                 (the parallel version's permuted inverse rank, eq. 3.1)
+    ``irank``  : output slot in *original* input order (eq. 2.2-2.3)
+    ``jcS``    : accumulated column pointer, length N+1
+    ``nnz``    : number of structural nonzeros (scalar)
+    """
+
+    rank: jax.Array
+    perm: jax.Array
+    irankP: jax.Array
+    irank: jax.Array
+    jcS: jax.Array
+    nnz: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Part 1 — count rows (Listing 4 / Listing 9)
+# ---------------------------------------------------------------------------
+def part1_count_rows(rows: jax.Array, M: int) -> jax.Array:
+    """Pessimistic accumulated row counter ``jrS`` (length M+2).
+
+    ``jrS[r]`` = number of inputs with row < r; the extra bin M+1 absorbs
+    padding sentinels (row == M).  Collisions are ignored — upper bound,
+    exactly as in the paper.
+    """
+    hist = jnp.bincount(rows, length=M + 1)  # bin M = padding
+    return jnp.concatenate(
+        [jnp.zeros((1,), hist.dtype), jnp.cumsum(hist)]
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Part 2 — build rank array (Listing 5 / Listing 10)
+# ---------------------------------------------------------------------------
+def part2_rank(rows: jax.Array, M: int) -> jax.Array:
+    """Stable counting-sort permutation over row keys.
+
+    ``rows[rank]`` is non-decreasing and equal keys keep input order —
+    the exact output of the paper's placement loop.  The pure-jnp path
+    delegates to XLA's stable sort; ``repro.kernels.counting_sort``
+    implements the true distribution-counting placement for TPU.
+    """
+    del M  # bins are implicit in the stable sort
+    return jnp.argsort(rows, stable=True).astype(jnp.int32)
+
+
+def counting_sort_positions(keys: jax.Array, jr: jax.Array) -> jax.Array:
+    """Explicit distribution-counting placement (paper Listing 5 algebra).
+
+    position[i] = (# keys < keys[i])  +  (# equal keys before i)
+                =  jr[keys[i]]        +  prior_equal(i)
+
+    Because the stable sort puts element i at landing position
+    ``inv[i] = jr[keys[i]] + prior_equal(i)`` already, the identity
+    below is the *specification* the Pallas kernel in
+    ``repro.kernels.counting_sort`` must meet; it is used by tests to
+    cross-check the kernel's prior-equal-key matmul against XLA's sort.
+    """
+    order = jnp.argsort(keys, stable=True)
+    inv = jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype)
+    )
+    prior_equal = inv - jr[keys]
+    return jr[keys] + prior_equal  # == inv, by construction
+
+
+# ---------------------------------------------------------------------------
+# Part 3 — uniqueness (Listing 6 / Listing 11), TPU-adapted
+# ---------------------------------------------------------------------------
+def part3_unique(
+    rows: jax.Array, cols: jax.Array, rank: jax.Array, M: int, N: int
+):
+    """Detect unique (row, col) pairs and build per-column counts.
+
+    Second stable counting-sort pass by *column* over the row-ordered
+    stream: the combined permutation orders data by (col, row) with
+    duplicates adjacent.  Boundary flags mark first occurrences; their
+    prefix sum is the output slot of every element of the sorted stream
+    (the parallel paper's ``irankP``, eq. (3.1), before Part-4 rebasing
+    it is the *within-column* counter value jcS[col]-1).
+    """
+    cols_ranked = cols[rank]
+    rank2 = jnp.argsort(cols_ranked, stable=True).astype(jnp.int32)
+    perm = rank[rank2]
+    r_s = rows[perm]
+    c_s = cols[perm]
+    valid = r_s < M
+    # adjacent-compare boundary detection on the (col,row)-ordered stream;
+    # no fused key needed (avoids int64), duplicates are adjacent pairs.
+    first = jnp.concatenate(
+        [
+            jnp.ones((1,), bool),
+            jnp.logical_or(c_s[1:] != c_s[:-1], r_s[1:] != r_s[:-1]),
+        ]
+    )
+    first = jnp.logical_and(first, valid)
+    # per-column unique counts (jcS before accumulation)
+    jc_counts = jnp.bincount(
+        jnp.where(first, c_s, N), length=N + 1
+    )[:N].astype(jnp.int32)
+    return perm, first, jc_counts, r_s, c_s, valid
+
+
+# ---------------------------------------------------------------------------
+# Part 4 — finalize intermediate format (Listing 7 / Listing 11 tail)
+# ---------------------------------------------------------------------------
+def part4_finalize(first: jax.Array, jc_counts: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Accumulate the column pointer and rebase slots.
+
+    The sorted-stream slot (irankP) is simply the inclusive prefix sum of
+    the first-occurrence flags minus one — the rebasing by column starts
+    that the paper does explicitly is implicit in the global prefix sum
+    because the stream is column-ordered.
+    """
+    jcS = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(jc_counts).astype(jnp.int32)]
+    )
+    irankP = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
+    nnz = jcS[-1].astype(jnp.int32)
+    return jcS, irankP, nnz
+
+
+# ---------------------------------------------------------------------------
+# Post-processing (Listing 14 / Listing 17)
+# ---------------------------------------------------------------------------
+def postprocess(
+    vals: jax.Array,
+    r_s: jax.Array,
+    irankP: jax.Array,
+    first: jax.Array,
+    valid: jax.Array,
+    perm: jax.Array,
+    nzmax: int,
+    M: int,
+):
+    """Scatter rows / segment-reduce values into the final CSC arrays.
+
+    After the radix passes duplicates are *adjacent*, so the paper's
+    colliding scatter-add becomes a segment sum — deterministic and
+    parallel (the paper's "reduction ... in a fully independent manner").
+    """
+    v_s = jnp.where(valid, vals[perm], 0.0)
+    slot = jnp.where(valid, irankP, nzmax)  # padding -> dropped
+    prS = jnp.zeros((nzmax,), vals.dtype).at[slot].add(v_s, mode="drop")
+    irS = jnp.full((nzmax,), M, jnp.int32).at[
+        jnp.where(first, slot, nzmax)
+    ].set(r_s.astype(jnp.int32), mode="drop")
+    return prS, irS
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("M", "N", "nzmax"))
+def assemble_arrays(
+    rows, cols, vals, *, M: int, N: int, nzmax: int | None = None
+) -> CSC:
+    """Assemble zero-offset COO arrays into a padded CSC (4-part path)."""
+    L = rows.shape[0]
+    nzmax = L if nzmax is None else nzmax
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    # Part 1 (the pessimistic jrS is consumed by the Pallas placement
+    # kernel; the jnp path folds it into the stable sort)
+    rank = part2_rank(rows, M)
+    perm, first, jc_counts, r_s, _c_s, valid = part3_unique(rows, cols, rank, M, N)
+    jcS, irankP, nnz = part4_finalize(first, jc_counts)
+    prS, irS = postprocess(vals, r_s, irankP, first, valid, perm, nzmax, M)
+    return CSC(data=prS, indices=irS, indptr=jcS, nnz=nnz, shape=(M, N))
+
+
+@partial(jax.jit, static_argnames=("M", "N", "nzmax"))
+def assemble_fused(
+    rows, cols, vals, *, M: int, N: int, nzmax: int | None = None
+) -> CSC:
+    """Beyond-paper fast path: one fused-key sort instead of two passes.
+
+    key = col * (M+1) + row fits int32 when (M+1)*(N+1) < 2^31; for
+    larger matrices we fall back to the two-pass path (int64 keys are
+    unavailable without x64 mode).  Halves the number of size-L
+    random-access passes (DESIGN §2.1) at the cost of a wider sort key.
+    """
+    L = rows.shape[0]
+    nzmax = L if nzmax is None else nzmax
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    if (M + 1) * (N + 1) >= 2**31:
+        return assemble_arrays(rows, cols, vals, M=M, N=N, nzmax=nzmax)
+    key = cols * jnp.int32(M + 1) + rows
+    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+    k_s = key[perm]
+    r_s = rows[perm]
+    c_s = cols[perm]
+    valid = r_s < M
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    first = jnp.logical_and(first, valid)
+    jc_counts = jnp.bincount(jnp.where(first, c_s, N), length=N + 1)[:N].astype(jnp.int32)
+    jcS, irankP, nnz = part4_finalize(first, jc_counts)
+    prS, irS = postprocess(vals, r_s, irankP, first, valid, perm, nzmax, M)
+    return CSC(data=prS, indices=irS, indptr=jcS, nnz=nnz, shape=(M, N))
+
+
+def assemble(coo: COO, *, nzmax: int | None = None, fused: bool = False) -> CSC:
+    fn = assemble_fused if fused else assemble_arrays
+    return fn(coo.rows, coo.cols, coo.vals, M=coo.M, N=coo.N, nzmax=nzmax)
+
+
+@partial(jax.jit, static_argnames=("M", "N"))
+def assembly_intermediates(rows, cols, *, M: int, N: int) -> AssemblyIntermediate:
+    """Expose the paper's intermediate arrays (for tests/benchmarks).
+
+    ``irank`` (original-order slots, eq. 2.2) is recovered from the
+    sorted-stream slots via irank[perm[k]] = irankP_sorted[k] — the
+    inverse of the paper's eq. (3.1).
+    """
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    rank = part2_rank(rows, M)
+    perm, first, jc_counts, _r_s, _c_s, _valid = part3_unique(rows, cols, rank, M, N)
+    jcS, irankP_sorted, nnz = part4_finalize(first, jc_counts)
+    L = rows.shape[0]
+    irank = jnp.zeros((L,), jnp.int32).at[perm].set(irankP_sorted)
+    # the paper's irankP is indexed by the *row-ranked* stream position
+    # (irankP[i] with i walking rank order): irankP_paper[rank2[k]] = slot_k
+    rank2 = jnp.zeros((L,), jnp.int32).at[perm].set(jnp.arange(L, dtype=jnp.int32))
+    del rank2
+    return AssemblyIntermediate(
+        rank=rank, perm=perm, irankP=irankP_sorted, irank=irank, jcS=jcS, nnz=nnz
+    )

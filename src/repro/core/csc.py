@@ -1,0 +1,104 @@
+"""Padded CSC (column-compressed sparse) matrix — the assembly output.
+
+The paper's output triplet is ``(prS, irS, jcS)`` with ``nnz`` nonzeros.
+XLA requires static shapes, so we keep *capacity* ``nzmax`` (defaults to
+the input length ``L``) and carry the true ``nnz`` as a traced scalar.
+Slots ``>= nnz`` hold ``row = M`` sentinels and ``val = 0`` so every
+consumer (SpMV, to_dense) is correct without masking branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSC:
+    """Matlab-layout sparse matrix with static capacity.
+
+    data    : float[nzmax]  -- ``prS``; zeros in padded tail
+    indices : int32[nzmax]  -- ``irS`` zero-offset rows; ``M`` in tail
+    indptr  : int32[N+1]    -- ``jcS``; indptr[N] == nnz
+    nnz     : int32 scalar  -- true number of structural nonzeros
+    shape   : (M, N) static
+    """
+
+    data: jax.Array
+    indices: jax.Array
+    indptr: jax.Array
+    nnz: jax.Array
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nzmax(self) -> int:
+        return int(self.data.shape[-1])
+
+    @property
+    def M(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.shape[1])
+
+    # -- dense conversions ------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        return csc_to_dense(self.data, self.indices, self.indptr, M=self.M, N=self.N)
+
+    # -- linear algebra ---------------------------------------------------
+    def __matmul__(self, x: jax.Array) -> jax.Array:
+        return spmv(self, x)
+
+
+@partial(jax.jit, static_argnames=("M", "N"))
+def csc_to_dense(data, indices, indptr, *, M: int, N: int) -> jax.Array:
+    nzmax = data.shape[0]
+    # column of each slot: count of indptr values <= slot position
+    slot = jnp.arange(nzmax, dtype=jnp.int32)
+    cols = jnp.searchsorted(indptr, slot, side="right").astype(jnp.int32) - 1
+    valid = indices < M
+    r = jnp.where(valid, indices, 0)
+    c = jnp.where(valid, jnp.clip(cols, 0, N - 1), 0)
+    v = jnp.where(valid, data, 0.0)
+    return jnp.zeros((M, N), data.dtype).at[r, c].add(v)
+
+
+def slot_columns(indptr: jax.Array, nzmax: int) -> jax.Array:
+    """Column index of every storage slot (padded tail -> N)."""
+    slot = jnp.arange(nzmax, dtype=jnp.int32)
+    return jnp.searchsorted(indptr, slot, side="right").astype(jnp.int32) - 1
+
+
+@jax.jit
+def spmv(A: CSC, x: jax.Array) -> jax.Array:
+    """y = A @ x for padded CSC via gather + segment-scatter-add.
+
+    Memory-bound like the paper's assembly; the Pallas version lives in
+    ``repro.kernels.spmv``.
+    """
+    cols = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < A.M
+    xv = jnp.where(valid, x[jnp.clip(cols, 0, A.N - 1)], 0.0)
+    contrib = A.data * xv
+    rows = jnp.where(valid, A.indices, 0)
+    return jnp.zeros((A.M,), contrib.dtype).at[rows].add(
+        jnp.where(valid, contrib, 0.0)
+    )
+
+
+@jax.jit
+def spmv_t(A: CSC, y: jax.Array) -> jax.Array:
+    """x = A.T @ y — gather rows, segment-sum per column (no scatter)."""
+    cols = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < A.M
+    yv = jnp.where(valid, y[jnp.where(valid, A.indices, 0)], 0.0)
+    contrib = A.data * yv
+    return jax.ops.segment_sum(
+        jnp.where(valid, contrib, 0.0),
+        jnp.clip(cols, 0, A.N - 1),
+        num_segments=A.N,
+    )

@@ -1,0 +1,126 @@
+"""NumPy oracle emulating Matlab ``sparse`` semantics.
+
+Matlab's built-in ``sparse`` is quicksort based (Shure, ref [16] of the
+paper); we emulate it with ``np.lexsort`` over ``(row, col)`` keys and a
+reduction over equal keys.  This is both the *correctness oracle* for
+every JAX/Pallas implementation in the repo and the *baseline* against
+which Table-4.2-style benchmarks are measured.
+
+Also contains a direct, literal transcription of the paper's serial
+Listings 4-7 + post-processing (``fsparse_listing15``) used to pin down
+exact intermediate arrays (``rank``, ``irank``, ``jcS``) of the running
+example of Listing 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def matlab_sparse_oracle(ii, jj, ss, M: int, N: int):
+    """(prS, irS, jcS) with Matlab semantics; zero-offset inputs.
+
+    Duplicate (i, j) pairs are summed.  Column-major (CSC) output with
+    rows ascending within each column.  Explicit zeros produced by
+    cancellation are *kept* (Matlab keeps them out — but so does the
+    paper's fsparse?  No: fsparse, like sparse(), sums values and keeps
+    the structural nonzero even when the sum is 0.0; squeezing zeros is
+    a separate `sparse` postpass Matlab applies only on some paths.  We
+    keep structural nonzeros — identical to fsparse).
+    """
+    ii = np.asarray(ii, dtype=np.int64)
+    jj = np.asarray(jj, dtype=np.int64)
+    ss = np.asarray(ss, dtype=np.float64)
+    # drop padding sentinels (row >= M)
+    keep = ii < M
+    ii, jj, ss = ii[keep], jj[keep], ss[keep]
+    order = np.lexsort((ii, jj))  # sort by col, then row (stable)
+    ii, jj, ss = ii[order], jj[order], ss[order]
+    if ii.size == 0:
+        return (
+            np.zeros(0, np.float64),
+            np.zeros(0, np.int32),
+            np.zeros(N + 1, np.int32),
+        )
+    key = jj * M + ii
+    boundary = np.empty(key.shape, dtype=bool)
+    boundary[0] = True
+    boundary[1:] = key[1:] != key[:-1]
+    slot = np.cumsum(boundary) - 1
+    nnz = int(slot[-1]) + 1
+    prS = np.zeros(nnz, np.float64)
+    np.add.at(prS, slot, ss)
+    irS = np.zeros(nnz, np.int32)
+    irS[slot] = ii
+    jcS = np.zeros(N + 1, np.int32)
+    np.add.at(jcS[1:], jj[boundary], 1)
+    jcS = np.cumsum(jcS).astype(np.int32)
+    return prS, irS, jcS
+
+
+def fsparse_listing15(ii, jj, sr, M: int, N: int):
+    """Literal transcription of the paper's serial algorithm (Listing 15).
+
+    ``ii``/``jj`` are *unit-offset* (as in the paper).  Returns the
+    intermediate arrays too so tests can assert the paper's running
+    example exactly: (prS, irS, jcS, rank, irank, jrS_part1).
+    """
+    ii = np.asarray(ii, dtype=np.int64)
+    jj = np.asarray(jj, dtype=np.int64)
+    sr = np.asarray(sr, dtype=np.float64)
+    L = ii.size
+
+    # Part 1: count and accumulate indices to rows  (Listing 4)
+    jrS = np.zeros(M + 1, np.int64)
+    for i in range(L):
+        jrS[ii[i]] += 1
+    for r in range(2, M + 1):
+        jrS[r] += jrS[r - 1]
+    jrS_part1 = jrS.copy()
+
+    # Part 2: build rank with the active use of jrS  (Listing 5)
+    rank = np.zeros(L, np.int64)
+    jr = np.zeros(M + 2, np.int64)  # jrS-- trick: jr[r] == old jrS[r-1]
+    jr[1:] = jrS_part1
+    for i in range(L):
+        rank[jr[ii[i]]] = i
+        jr[ii[i]] += 1
+
+    # Part 3: uniqueness  (Listing 6)
+    jcS = np.zeros(N + 1, np.int64)
+    hcol = np.zeros(N + 1, np.int64)  # hcol-- trick folded in: index by col
+    irank = np.zeros(L, np.int64)
+    i = 0
+    for row in range(1, M + 1):
+        while i < jr[row]:  # jr[row] == post-increment jrS == row end
+            ixijs = rank[i]
+            col = jj[ixijs]
+            if hcol[col] < row:
+                hcol[col] = row
+                jcS[col] += 1
+            irank[ixijs] = jcS[col] - 1
+            i += 1
+
+    # Part 4: accumulate pointer to columns  (Listing 7)
+    for c in range(2, N + 1):
+        jcS[c] += jcS[c - 1]
+    for i in range(L):
+        irank[i] += jcS[jj[i] - 1]  # jcS-- trick
+
+    # Post-processing  (Listing 14)
+    nnz = int(jcS[N])
+    irS = np.zeros(nnz, np.int32)
+    prS = np.zeros(nnz, np.float64)
+    for i in range(L):
+        irS[irank[i]] = ii[i] - 1
+        prS[irank[i]] += sr[i]
+
+    return prS, irS, jcS.astype(np.int32), rank, irank, jrS_part1
+
+
+def dense_oracle(ii, jj, ss, M: int, N: int) -> np.ndarray:
+    """Dense scatter-add oracle (zero-offset)."""
+    out = np.zeros((M, N), np.float64)
+    keep = np.asarray(ii) < M
+    np.add.at(out, (np.asarray(ii)[keep], np.asarray(jj)[keep]),
+              np.asarray(ss, dtype=np.float64)[keep])
+    return out

@@ -1,0 +1,28 @@
+"""repro.kernels — Pallas TPU kernels for the assembly hot spots.
+
+Layout (one directory per kernel, as in DESIGN.md):
+  hist/           Part 1: blocked private-counter histogram
+  counting_sort/  Part 2: MXU one-hot/triangular placement
+  segment_sum/    Part 3/4+post: carry-scan cumsum + sorted segment sum
+  spmv/           padded-ELL SpMV (FEM example)
+  assembly_ops    end-to-end kernel-backed assembly
+"""
+from .assembly_ops import assemble_pallas
+from .common import INTERPRET
+from .counting_sort.ops import counting_sort
+from .hist.ops import block_offsets, histogram
+from .segment_sum.ops import segment_sum_sorted
+from .segment_sum.segment_sum import blocked_cumsum
+from .spmv.ops import csc_to_ell, spmv
+
+__all__ = [
+    "INTERPRET",
+    "assemble_pallas",
+    "block_offsets",
+    "blocked_cumsum",
+    "counting_sort",
+    "csc_to_ell",
+    "histogram",
+    "segment_sum_sorted",
+    "spmv",
+]

@@ -1,0 +1,44 @@
+"""Jit'd counting sort built from the hist + placement kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..hist.ops import block_offsets
+from .counting_sort import placement
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nbins", "block_b", "block_t", "interpret")
+)
+def counting_sort(
+    keys: jax.Array,
+    *,
+    nbins: int,
+    block_b: int = 1024,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stable distribution counting sort of bounded int keys.
+
+    Returns ``(rank, positions)``: ``keys[rank]`` is sorted stably and
+    ``rank[positions[i]] == i``.  This is the paper's Part 1 + Part 2
+    pipeline: private per-block histograms -> hierarchical accumulation
+    -> placement -> one collision-free scatter.
+    """
+    offsets, _jr = block_offsets(
+        keys, nbins=nbins, block_b=block_b, interpret=interpret
+    )
+    pos = placement(
+        keys, offsets, nbins=nbins, block_b=block_b, block_t=block_t,
+        interpret=interpret,
+    )
+    L = keys.shape[0]
+    rank = (
+        jnp.zeros((L,), jnp.int32)
+        .at[pos]
+        .set(jnp.arange(L, dtype=jnp.int32), mode="drop")
+    )
+    return rank, pos

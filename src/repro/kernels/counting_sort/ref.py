@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for counting-sort placement."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def placement_ref(keys):
+    """positions[i] = landing slot of element i under a stable key sort."""
+    order = jnp.argsort(keys, stable=True)
+    L = keys.shape[0]
+    return (
+        jnp.zeros((L,), jnp.int32)
+        .at[order]
+        .set(jnp.arange(L, dtype=jnp.int32))
+    )
+
+
+def counting_sort_ref(keys):
+    """(rank, positions): rank = stable argsort permutation."""
+    rank = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    return rank, placement_ref(keys)

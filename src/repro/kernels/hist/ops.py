@@ -1,0 +1,44 @@
+"""Jit'd wrappers around the histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .hist import block_histogram
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "block_b", "interpret"))
+def histogram(
+    keys: jax.Array, *, nbins: int, block_b: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Total histogram = tree-reduce of the per-block private counters."""
+    per_block = block_histogram(
+        keys, nbins=nbins, block_b=block_b, interpret=interpret
+    )
+    return jnp.sum(per_block, axis=0)[:nbins]
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "block_b", "interpret"))
+def block_offsets(
+    keys: jax.Array, *, nbins: int, block_b: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(offsets[nblocks, nbins], jr[nbins+1]) for counting-sort placement.
+
+    ``offsets[b, k]`` = global start of key ``k``  +  number of key-``k``
+    elements in blocks before ``b`` — i.e. the paper's "private jrS per
+    thread" after the two hierarchical accumulations of Listing 9.
+    """
+    per_block = block_histogram(
+        keys, nbins=nbins, block_b=block_b, interpret=interpret
+    )[:, :nbins]
+    totals = jnp.sum(per_block, axis=0)
+    jr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
+    )
+    prior_blocks = jnp.cumsum(per_block, axis=0) - per_block  # exclusive
+    offsets = jr[None, :-1] + prior_blocks.astype(jnp.int32)
+    return offsets, jr

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the histogram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(keys: jax.Array, nbins: int) -> jax.Array:
+    """Counts of keys in [0, nbins); out-of-range keys ignored."""
+    keys = jnp.where((keys >= 0) & (keys < nbins), keys, nbins)
+    return jnp.bincount(keys, length=nbins + 1)[:nbins].astype(jnp.int32)
+
+
+def block_histogram_ref(keys: jax.Array, nbins: int, block_b: int) -> jax.Array:
+    """Per-block histograms, same layout as the kernel (unpadded bins)."""
+    L = keys.shape[0]
+    Lp = -(-max(L, block_b) // block_b) * block_b
+    keys = jnp.pad(keys, (0, Lp - L), constant_values=nbins)
+    blocks = keys.reshape(-1, block_b)
+    return jax.vmap(lambda k: histogram_ref(k, nbins))(blocks)

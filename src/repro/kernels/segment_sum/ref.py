@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the scan/segment-sum kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def cumsum_ref(x):
+    return jnp.cumsum(x)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum_sorted_ref(vals, first, *, num_segments: int):
+    """Segment totals of a sorted stream; segments delimited by ``first``."""
+    seg_ids = jnp.cumsum(first.astype(jnp.int32)) - 1
+    return jax.ops.segment_sum(
+        vals, seg_ids, num_segments=num_segments, indices_are_sorted=True
+    )

@@ -1,0 +1,57 @@
+"""Part-3/4 + post-processing kernel: blocked prefix scan with carry.
+
+After the counting-sort passes, duplicates are *adjacent* in the value
+stream, so the paper's colliding scatter-add (Listing 14/17) becomes a
+segmented reduction over a sorted stream.  The only non-elementwise
+ingredient is a *global cumulative sum* — implemented here as a blocked
+Pallas scan: TPU grid steps execute **in order** on a core, so a
+scratch VMEM cell carries the running total across blocks (the Pallas
+idiom that replaces the paper's serial "accumulate over threads" loop).
+
+``ops.segment_sum_sorted`` then extracts per-segment totals with two
+contiguous gathers — no random scatter ever touches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import INTERPRET, round_up
+
+
+def _cumsum_kernel(x_ref, out_ref, carry_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...]
+    c = jnp.cumsum(x)
+    out_ref[...] = c + carry_ref[0]
+    carry_ref[0] = carry_ref[0] + c[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def blocked_cumsum(
+    x: jax.Array, *, block_b: int = 4096, interpret: bool | None = None
+) -> jax.Array:
+    """Inclusive prefix sum via sequential-grid carry scan."""
+    interpret = INTERPRET if interpret is None else interpret
+    L = x.shape[0]
+    Lp = round_up(max(L, block_b), block_b)
+    xp = jnp.pad(x, (0, Lp - L))
+    out = pl.pallas_call(
+        _cumsum_kernel,
+        grid=(Lp // block_b,),
+        in_specs=[pl.BlockSpec((block_b,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Lp,), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), x.dtype)],
+        interpret=interpret,
+    )(xp)
+    return out[:L]

@@ -1,0 +1,53 @@
+"""Jit'd SpMV wrapper + one-time CSC -> padded-ELL conversion."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.csc import CSC, slot_columns
+from .spmv import spmv_ell
+
+
+@functools.partial(jax.jit, static_argnames=("max_per_row",))
+def csc_to_ell(A: CSC, *, max_per_row: int):
+    """Transpose the storage: per-row fixed-width column/value slots.
+
+    Rows with more than ``max_per_row`` entries overflow (reported);
+    FEM matrices have bounded connectivity so the bound is structural.
+    """
+    M, N = A.shape
+    cols = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < M
+    r = jnp.where(valid, A.indices, M)
+    # occurrence index of each slot within its row == counting-sort
+    # placement over row keys restricted to the CSC order (stable).
+    order = jnp.argsort(r, stable=True)
+    r_s = r[order]
+    start = jnp.searchsorted(r_s, jnp.arange(M + 1, dtype=r_s.dtype))
+    within = jnp.arange(r.shape[0], dtype=jnp.int32) - start[r_s].astype(jnp.int32)
+    overflow = jnp.any(jnp.logical_and(within >= max_per_row, r_s < M))
+    flat = jnp.where(
+        jnp.logical_and(r_s < M, within < max_per_row),
+        r_s * max_per_row + within,
+        M * max_per_row,
+    )
+    ell_cols = (
+        jnp.full((M * max_per_row,), N, jnp.int32)
+        .at[flat]
+        .set(jnp.clip(cols, 0, N)[order].astype(jnp.int32), mode="drop")
+        .reshape(M, max_per_row)
+    )
+    ell_vals = (
+        jnp.zeros((M * max_per_row,), A.data.dtype)
+        .at[flat]
+        .set(A.data[order], mode="drop")
+        .reshape(M, max_per_row)
+    )
+    return ell_cols, ell_vals, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def spmv(cols, vals, x, *, block_r: int = 256, interpret: bool | None = None):
+    return spmv_ell(cols, vals, x, block_r=block_r, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for ELL SpMV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols, vals, x):
+    N = x.shape[0]
+    xp = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+    xg = xp[jnp.clip(cols, 0, N)]
+    return jnp.sum(vals * xg, axis=1)

@@ -1,0 +1,190 @@
+"""Path-based sharding rules: param/cache/batch pytrees -> PartitionSpecs.
+
+Every parameter name encodes its layout contract (see models/layers.py):
+  *_in   [d_model, F]      -> P("data", "model")   (column parallel + FSDP)
+  *_out  [F, d_model]      -> P("model", "data")   (row parallel + FSDP)
+  *_ein  [E, D, F]         -> P("model", None, None)  (expert parallel)
+  *_eout [E, F, D]         -> P("model", None, None)
+  embedding [V, D]         -> P("model", "data")   (vocab parallel)
+  norms / scalars          -> replicated
+
+Leading layer-stacking dims (from lax.scan) are padded with None.
+Divisibility is checked against the mesh: a rule that does not divide
+falls back to replication on that dim (e.g. gemma3's single KV head).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+# (regex on "/"-joined path, spec for the *trailing* dims)
+# NOTE (§Perf iteration 1): the embedding was originally ("model","data");
+# the D-axis data-sharding forced the SPMD partitioner into "involuntary
+# full rematerialization" of the token gather (replicate + re-partition),
+# costing 5x HBM bytes and 21x collective bytes on qwen3 train_4k probes.
+# ("model", None) removes the pathological reshard.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embedding$", ("model", None)),
+    (r"router$", (None, None)),
+    (r"(gate|up)_ein$", ("model", "data", None)),
+    (r"down_eout$", ("model", None, "data")),
+    (r"_in$", ("data", "model")),
+    (r"_out$", ("model", "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(a_log|d_skip|dt_bias)$", ("model",)),
+    (r"gnorm/scale$", ("model",)),
+    (r"scale$", (None,)),
+]
+
+
+def _fits(mesh: Mesh, axis, size: int) -> bool:
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return size % total == 0
+
+
+def spec_for_param(mesh: Mesh, path: str, shape: tuple[int, ...],
+                   *, mode: str = "train") -> P:
+    """mode="train": FSDP("data") + TP("model").  mode="serve": TP only.
+
+    §Perf iteration 4: FSDP weight sharding is wrong for decode — each
+    step all-gathers every layer's weights over "data" to do a tiny
+    [B,1,D] matmul (mamba2 decode_32k: 48 x 19.8 MB per token).  Serving
+    replicates weights across "data" (they fit: params/TP per device)
+    and keeps only TP sharding; the all-gather disappears.
+    """
+    for pattern, core in PARAM_RULES:
+        if re.search(pattern, path):
+            core = list(core)
+            ndim = len(shape)
+            if len(core) > ndim:          # e.g. scalar where rule has 1 dim
+                core = core[-ndim:] if ndim else []
+            spec = [None] * (ndim - len(core)) + core
+            if mode == "serve":
+                spec = [None if a == "data" else a for a in spec]
+            # divisibility fallback -> replicate that dim
+            spec = [
+                a if _fits(mesh, a, shape[i]) else None
+                for i, a in enumerate(spec)
+            ]
+            return P(*spec)
+    return P()  # replicate
+
+
+def param_specs(mesh: Mesh, params, *, mode: str = "train"):
+    """PartitionSpec pytree mirroring ``params``."""
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        return spec_for_param(mesh, name, leaf.shape, mode=mode)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh: Mesh, params, *, mode: str = "train"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(mesh, params, mode=mode)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, *, batch: int) -> P:
+    """Sharding for [B, S]-leading arrays; B=1 falls back to replication."""
+    dp = batch_axes(mesh)
+    if _fits(mesh, dp, batch):
+        return P(dp, None)
+    return P(None, None)
+
+
+def batch_specs_for(mesh: Mesh, batch_tree, *, batch: int):
+    dp = batch_axes(mesh)
+    dp_ok = _fits(mesh, dp, batch)
+
+    def one(path, leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim and dp_ok:
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(mesh: Mesh, cache, cfg, *, batch: int):
+    """KV/state cache specs.  batch==1 (long-context) shards *sequence*."""
+    dp = batch_axes(mesh)
+    dp_ok = _fits(mesh, dp, batch)
+    tp_ok_kv = _fits(mesh, "model", cfg.n_kv_heads)
+    H_ssm = cfg.ssm.n_heads(cfg.d_model) if cfg.family in ("ssm", "hybrid") else 0
+    conv_ch = (
+        cfg.ssm.d_inner(cfg.d_model) + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+        if H_ssm else 0
+    )
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        nd = leaf.ndim
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "ck", "cv"):      # [L, B, S, Hkv, Dh]
+            spec = [None] * nd
+            seq_axes = []
+            if dp_ok:
+                spec[1] = dp
+            elif leaf.shape[2] % _total(mesh, dp) == 0:
+                seq_axes.extend(dp if isinstance(dp, tuple) else (dp,))
+            if tp_ok_kv:
+                spec[3] = "model"
+            elif leaf.shape[2] % (_total(mesh, seq_axes or ()) *
+                                  mesh.shape["model"]) == 0:
+                # §Perf iteration 8: too few KV heads to TP-shard (gemma
+                # kv=1, starcoder kv=4, qwen/dbrx/llama kv=8 on a 16-way
+                # model axis) -> the cache was REPLICATED across "model".
+                # Shard the SEQUENCE dim there instead: softmax max/sum
+                # and the PV contraction reduce over it, so GSPMD inserts
+                # small psums; cache memory and the decode all-gather
+                # drop by the TP degree.
+                seq_axes.append("model")
+            if seq_axes:
+                spec[2] = tuple(seq_axes)
+            return P(*spec)
+        if name == "state":                      # [L, B, H, N, P]
+            spec = [None] * nd
+            if dp_ok:
+                spec[1] = dp
+            if H_ssm and _fits(mesh, "model", H_ssm):
+                spec[2] = "model"
+            return P(*spec)
+        if name == "conv":                       # [L, B, W-1, ch]
+            spec = [None] * nd
+            if dp_ok:
+                spec[1] = dp
+            if conv_ch and _fits(mesh, "model", conv_ch):
+                spec[3] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _total(mesh, axes) -> int:
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    t = 1
+    for a in axes:
+        t *= mesh.shape[a]
+    return t  # == 1 for empty axes
+
+
+def logits_spec(mesh: Mesh, *, batch: int) -> P:
+    dp = batch_axes(mesh)
+    dp_ok = _fits(mesh, dp, batch)
+    return P(dp if dp_ok else None, None, "model")

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` never allocates: it returns abstract arrays (plus the
+cache template for decode shapes via ``jax.eval_shape``).  Modality
+frontends are STUBS per the assignment: encoder/vision inputs are
+precomputed embedding tensors of the documented size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig, SHAPES
+from ..models.model import init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["src_embeds"] = sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sds(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = train_batch_specs(cfg, shape)
+    del b["labels"]
+    return b
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_template, tokens) for one-token decode with a full cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, batch=B, seq_len=S)
+    )
+    tokens = sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "skipped: pure full-attention arch; 500k dense KV decode is "
+            "outside the published operating envelope (DESIGN.md §6)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """The dry-run contract: kwargs for the step function being lowered."""
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(why)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    cache, tokens = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tokens}

@@ -1,0 +1,107 @@
+"""Primitive layers — pure functions over param pytrees (no flax).
+
+Naming convention matters: parameter-tree key names are matched by
+``repro.launch.sharding`` regex rules to assign PartitionSpecs, so every
+matmul weight here follows ``*_in`` (sharded on output dim) / ``*_out``
+(sharded on input dim) or an explicit rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if params is not None:
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparametric_layernorm(x, eps=1e-5):
+    """OLMo-style non-parametric LN: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    """Returns (init_fn|None, apply_fn) honoring nonparametric_norm."""
+    if cfg.nonparametric_norm:
+        return None, lambda p, x: nonparametric_layernorm(x)
+    return init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d, dtype):
+    return {"embedding": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+#: flip to route embedding backward through the fsparse-style
+#: counting-sort accumulation (repro.train.sparse_grads).
+USE_SPARSE_EMBED_GRAD = True
+
+
+def embed(params, tokens):
+    if USE_SPARSE_EMBED_GRAD:
+        from ..train.sparse_grads import sparse_grad_embed
+        return sparse_grad_embed(params["embedding"], tokens)
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits against the (possibly tied) embedding table."""
+    return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim, theta):
+    return theta ** (-jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, Dh]; positions: [..., S]."""
+    Dh = x.shape[-1]
+    freqs = rope_frequencies(Dh, theta)                     # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate_in": _dense_init(k1, d_model, d_ff, dtype),
+        "up_in": _dense_init(k2, d_model, d_ff, dtype),
+        "down_out": _dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["gate_in"])
+    u = jnp.einsum("...d,df->...f", x, params["up_in"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["down_out"])

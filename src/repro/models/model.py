@@ -1,0 +1,630 @@
+"""Model assembly: init / forward / prefill / decode for all families.
+
+Families: dense, moe, ssm, hybrid (zamba2), encdec (seamless), vlm
+(llama-3.2-vision).  Layers are stacked with ``lax.scan`` (params have
+a leading layer axis) so the compiled HLO contains *one* block body —
+essential to keep 512-device compile times sane.  Heterogeneous layer
+behaviour (gemma3 local:global, zamba2 shared attention, vlm cross
+attention) is expressed with ``lax.cond`` on the layer index inside the
+scan.
+
+Everything is a pure function over a params pytree; sharding is applied
+from the outside by path-based rules (``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+import functools
+
+# §Perf iteration 3: layer-scan remat saves matmul outputs (MXU results)
+# and recomputes only cheap elementwise ops in the backward pass, instead
+# of full per-layer recomputation.
+_REMAT_POLICY = None  # set lazily; jax.checkpoint_policies at import is fine
+
+
+def _ckpt(fn):
+    import jax as _jax
+    if runtime_flags.remat() == "dots":
+        return _jax.checkpoint(
+            fn,
+            policy=_jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return _jax.checkpoint(fn)
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    apply_rope_kv_for_cache,
+    cross_attention,
+    cross_attention_decode,
+    init_attention,
+    self_attention,
+    self_attention_decode,
+    _project_kv,
+)
+from .config import ModelConfig
+from .layers import (
+    apply_rope,
+    embed,
+    init_embedding,
+    init_mlp,
+    make_norm,
+    mlp,
+    unembed,
+)
+from .moe import init_moe, moe_ffn
+from .ssm import init_mamba, mamba_decode, mamba_forward
+from . import runtime_flags
+
+KV_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def _init_norm(cfg, key, d=None):
+    init_fn, _ = make_norm(cfg)
+    if init_fn is None:
+        return {}
+    return init_fn(d or cfg.d_model, jnp.dtype(cfg.dtype))
+
+
+def _apply_norm(cfg, params, x):
+    _, apply_fn = make_norm(cfg)
+    return apply_fn(params if params else None, x)
+
+
+def init_block(key, cfg: ModelConfig):
+    """One transformer/ssm block's params (pre-stacking)."""
+    ks = jax.random.split(key, 8)
+    fam = cfg.family
+    p: dict[str, Any] = {}
+    if fam in ("dense", "moe", "encdec", "vlm"):
+        p["norm1"] = _init_norm(cfg, ks[0])
+        p["attn"] = init_attention(ks[1], cfg)
+        p["norm2"] = _init_norm(cfg, ks[2])
+        if fam == "moe":
+            p["moe"] = init_moe(ks[3], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    elif fam in ("ssm", "hybrid"):
+        p["norm1"] = _init_norm(cfg, ks[0])
+        p["mamba"] = init_mamba(ks[1], cfg)
+    return p
+
+
+def init_cross_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": _init_norm(cfg, k1),
+        "attn": init_attention(k2, cfg, cross=True),
+    }
+
+
+def init_enc_block(key, cfg):
+    return init_block(key, cfg)  # same structure; masks differ
+
+
+def init_model(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, jnp.dtype(cfg.dtype)),
+        "final_norm": _init_norm(cfg, keys[1]),
+    }
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_block(k, cfg))(lkeys)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_norm1"] = _init_norm(cfg, keys[3])
+        params["shared_attn"] = init_attention(keys[4], cfg)
+        params["shared_norm2"] = _init_norm(cfg, keys[5])
+        params["shared_mlp"] = init_mlp(
+            keys[6], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        ckeys = jax.random.split(keys[3], n_cross)
+        params["cross"] = jax.vmap(lambda k: init_cross_block(k, cfg))(ckeys)
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(keys[3], cfg.n_enc_layers)
+        params["enc_layers"] = jax.vmap(lambda k: init_enc_block(k, cfg))(ekeys)
+        params["enc_final_norm"] = _init_norm(cfg, keys[4])
+        dkeys = jax.random.split(keys[5], cfg.n_layers)
+        params["dec_cross"] = jax.vmap(lambda k: init_cross_block(k, cfg))(dkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full sequence)
+# ---------------------------------------------------------------------------
+def _layer_window(cfg, idx):
+    """Traced (is_global) flag for local:global interleaving."""
+    if cfg.local_global_every:
+        return (idx + 1) % cfg.local_global_every == 0
+    return jnp.array(cfg.sliding_window == 0)
+
+
+def _dense_block(p, x, cfg, idx, *, positions, causal, kv_chunk):
+    if cfg.local_global_every:
+        is_global = _layer_window(cfg, idx)
+        a = jax.lax.cond(
+            is_global,
+            lambda: self_attention(
+                p["attn"], _apply_norm(cfg, p.get("norm1"), x), cfg,
+                positions=positions, causal=causal, window=0, kv_chunk=kv_chunk,
+            ),
+            lambda: self_attention(
+                p["attn"], _apply_norm(cfg, p.get("norm1"), x), cfg,
+                positions=positions, causal=causal,
+                window=cfg.sliding_window, kv_chunk=kv_chunk,
+            ),
+        )
+    else:
+        a = self_attention(
+            p["attn"], _apply_norm(cfg, p.get("norm1"), x), cfg,
+            positions=positions, causal=causal,
+            window=cfg.sliding_window, kv_chunk=kv_chunk,
+        )
+    x = x + a
+    h = _apply_norm(cfg, p.get("norm2"), x)
+    if "moe" in p:
+        y, aux = moe_ffn(p["moe"], h, cfg)
+    else:
+        y, aux = mlp(p["mlp"], h), jnp.float32(0.0)
+    return x + y, aux
+
+
+def _ssm_block(p, x, cfg):
+    return x + mamba_forward(p["mamba"], _apply_norm(cfg, p.get("norm1"), x), cfg)
+
+
+def _shared_attn_block(params, x, cfg, *, positions, kv_chunk):
+    a = self_attention(
+        params["shared_attn"], _apply_norm(cfg, params.get("shared_norm1"), x),
+        cfg, positions=positions, causal=True, window=0, kv_chunk=kv_chunk,
+    )
+    x = x + a
+    y = mlp(params["shared_mlp"], _apply_norm(cfg, params.get("shared_norm2"), x))
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring): tokens -> logits
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cfg", "kv_chunk"))
+def forward(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024):
+    """batch: {"tokens": [B,S]} (+ family extras). Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed(params["embed"], tokens)
+    fam = cfg.family
+
+    if fam == "encdec":
+        src = batch["src_embeds"]            # stubbed audio frontend
+        enc_pos = jnp.broadcast_to(jnp.arange(src.shape[1]), src.shape[:2])
+
+        def enc_step(h, lp):
+            h, _ = _dense_block(lp, h, cfg, 0, positions=enc_pos,
+                                causal=False, kv_chunk=kv_chunk)
+            return h, None
+
+        enc_out, _ = jax.lax.scan(
+            _ckpt(enc_step), src, params["enc_layers"],
+            unroll=runtime_flags.unroll(),
+        )
+        enc_out = _apply_norm(cfg, params.get("enc_final_norm"), enc_out)
+
+        def dec_step(carry, xs):
+            h = carry
+            lp, cp = xs
+            h, _ = _dense_block(lp, h, cfg, 0, positions=positions,
+                                causal=True, kv_chunk=kv_chunk)
+            c = cross_attention(
+                cp["attn"], _apply_norm(cfg, cp.get("norm"), h), enc_out, cfg,
+                kv_chunk=kv_chunk,
+            )
+            return h + c, None
+
+        x, _ = jax.lax.scan(
+            _ckpt(dec_step), x, (params["layers"], params["dec_cross"]),
+            unroll=runtime_flags.unroll(),
+        )
+        aux_total = jnp.float32(0.0)
+
+    elif fam == "vlm":
+        vis = batch["vision_embeds"]         # stubbed patch frontend
+        every = cfg.cross_attn_every
+
+        def step(carry, xs):
+            h, aux = carry
+            lp, idx = xs
+            h, a = _dense_block(lp, h, cfg, idx, positions=positions,
+                                causal=True, kv_chunk=kv_chunk)
+            def with_cross(h):
+                ci = jnp.maximum((idx + 1) // every - 1, 0)
+                cp = jax.tree.map(lambda v: v[ci], params["cross"])
+                return h + cross_attention(
+                    cp["attn"], _apply_norm(cfg, cp.get("norm"), h), vis, cfg,
+                    kv_chunk=kv_chunk,
+                )
+            fire = (idx + 1) % every == 0
+            h = jax.lax.cond(fire, with_cross, lambda h: h, h)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _ckpt(step), (x, jnp.float32(0.0)),
+            (params["layers"], jnp.arange(cfg.n_layers)),
+            unroll=runtime_flags.unroll(),
+        )
+
+    elif fam in ("ssm", "hybrid"):
+        every = cfg.hybrid_attn_every
+
+        def step(carry, xs):
+            h = carry
+            lp, idx = xs
+            h = _ssm_block(lp, h, cfg)
+            if fam == "hybrid" and every:
+                fire = (idx + 1) % every == 0
+                h = jax.lax.cond(
+                    fire,
+                    lambda h: _shared_attn_block(
+                        params, h, cfg, positions=positions, kv_chunk=kv_chunk
+                    ),
+                    lambda h: h,
+                    h,
+                )
+            return h, None
+
+        x, _ = jax.lax.scan(
+            _ckpt(step), x,
+            (params["layers"], jnp.arange(cfg.n_layers)),
+            unroll=runtime_flags.unroll(),
+        )
+        aux_total = jnp.float32(0.0)
+
+    else:  # dense / moe
+        def step(carry, xs):
+            h, aux = carry
+            lp, idx = xs
+            h, a = _dense_block(lp, h, cfg, idx, positions=positions,
+                                causal=True, kv_chunk=kv_chunk)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _ckpt(step), (x, jnp.float32(0.0)),
+            (params["layers"], jnp.arange(cfg.n_layers)),
+            unroll=runtime_flags.unroll(),
+        )
+
+    x = _apply_norm(cfg, params.get("final_norm"), x)
+    logits = unembed(params["embed"], x)
+    return logits, aux_total
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kv_chunk"))
+def loss_fn(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024):
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward(params, batch, cfg, kv_chunk=kv_chunk)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:  # mask padded vocab slots
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        lf = jnp.where(pad_mask, -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, *, batch: int, seq_len: int):
+    """Zero cache pytree with the dry-run contract shapes."""
+    Dh = cfg.resolved_head_dim
+    Hkv = cfg.n_kv_heads
+    fam = cfg.family
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+    if fam == "encdec":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["ck"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["cv"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+    if fam == "vlm" and cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        V = cfg.n_vision_tokens
+        cache["ck"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), KV_DTYPE)
+        cache["cv"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), KV_DTYPE)
+    if fam in ("ssm", "hybrid"):
+        s = cfg.ssm
+        H = s.n_heads(cfg.d_model)
+        conv_ch = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+        cache["state"] = jnp.zeros(
+            (cfg.n_layers, batch, H, s.d_state, s.head_dim), jnp.float32
+        )
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, s.conv_width - 1, conv_ch), KV_DTYPE
+        )
+    if fam == "hybrid" and cfg.hybrid_attn_every:
+        n_attn = cfg.n_layers // cfg.hybrid_attn_every
+        cache["k"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["v"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), KV_DTYPE)
+    return cache
+
+
+def _ring_write(cache_layer, new, pos):
+    """Write [B,1,...] ``new`` at ring position pos % S."""
+    S = cache_layer.shape[1]
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_layer, new.astype(cache_layer.dtype), pos % S, axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode step. tokens: [B, 1] -> (logits [B,1,V], cache')."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        def step(carry, xs):
+            h = carry
+            if fam == "encdec":
+                lp, cp, k, v, ck, cv = xs
+            elif fam == "vlm":
+                lp, k, v, idx = xs
+            else:
+                lp, k, v, idx = xs
+            hn = _apply_norm(cfg, lp.get("norm1"), h)
+            if cfg.local_global_every:
+                is_global = _layer_window(cfg, idx)
+                W = cfg.sliding_window
+                def g_branch():
+                    return self_attention_decode(lp["attn"], hn, k, v, cfg,
+                                                 position=pos)
+                def l_branch():
+                    return self_attention_decode(lp["attn"], hn, k, v, cfg,
+                                                 position=pos, window=W)
+                a, k2, v2 = jax.lax.cond(is_global, g_branch, l_branch)
+            else:
+                a, k2, v2 = self_attention_decode(lp["attn"], hn, k, v, cfg,
+                                                  position=pos)
+            h = h + a
+            if fam == "encdec":
+                c = cross_attention_decode(
+                    cp["attn"], _apply_norm(cfg, cp.get("norm"), h), ck, cv, cfg
+                )
+                h = h + c
+            if fam == "vlm" and cfg.cross_attn_every:
+                every = cfg.cross_attn_every
+                def with_cross(h):
+                    ci = jnp.maximum((idx + 1) // every - 1, 0)
+                    cp2 = jax.tree.map(lambda a_: a_[ci], params["cross"])
+                    return h + cross_attention_decode(
+                        cp2["attn"], _apply_norm(cfg, cp2.get("norm"), h),
+                        cache["ck"][ci], cache["cv"][ci], cfg,
+                    )
+                h = jax.lax.cond((idx + 1) % every == 0, with_cross, lambda h: h, h)
+            h2 = _apply_norm(cfg, lp.get("norm2"), h)
+            if "moe" in lp:
+                y, _ = moe_ffn(lp["moe"], h2, cfg)
+            else:
+                y = mlp(lp["mlp"], h2)
+            h = h + y
+            return h, (k2, v2)
+
+        idxs = jnp.arange(cfg.n_layers)
+        if fam == "encdec":
+            xs = (params["layers"], params["dec_cross"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"])
+        else:
+            xs = (params["layers"], cache["k"], cache["v"], idxs)
+        x, (k_all, v_all) = jax.lax.scan(step, x, xs,
+                                         unroll=runtime_flags.unroll())
+        cache = dict(cache, k=k_all, v=v_all)
+
+    elif fam in ("ssm", "hybrid"):
+        every = cfg.hybrid_attn_every
+        n_attn = cfg.n_layers // every if every else 0
+
+        def step(carry, xs):
+            if fam == "hybrid" and every:
+                h, ak, av = carry
+            else:
+                h = carry
+            lp, st, cv, idx = xs
+            hn = _apply_norm(cfg, lp.get("norm1"), h)
+            o, st2, cv2 = mamba_decode(lp["mamba"], hn, st, cv, cfg)
+            h = h + o
+            if fam == "hybrid" and every:
+                def with_attn(args):
+                    h, ak, av = args
+                    ai = jnp.maximum((idx + 1) // every - 1, 0)
+                    hn2 = _apply_norm(cfg, params.get("shared_norm1"), h)
+                    o2, kn, vn = self_attention_decode(
+                        params["shared_attn"], hn2, ak[ai], av[ai], cfg, position=pos
+                    )
+                    h = h + o2
+                    h = h + mlp(params["shared_mlp"],
+                                _apply_norm(cfg, params.get("shared_norm2"), h))
+                    ak = jax.lax.dynamic_update_index_in_dim(ak, kn, ai, 0)
+                    av = jax.lax.dynamic_update_index_in_dim(av, vn, ai, 0)
+                    return h, ak, av
+                h, ak, av = jax.lax.cond(
+                    (idx + 1) % every == 0, with_attn, lambda a: a, (h, ak, av)
+                )
+                return (h, ak, av), (st2, cv2)
+            return h, (st2, cv2)
+
+        idxs = jnp.arange(cfg.n_layers)
+        xs = (params["layers"], cache["state"], cache["conv"], idxs)
+        if fam == "hybrid" and every:
+            (x, ak, av), (st_all, cv_all) = jax.lax.scan(
+                step, (x, cache["k"], cache["v"]), xs,
+                unroll=runtime_flags.unroll(),
+            )
+            cache = dict(cache, k=ak, v=av, state=st_all, conv=cv_all)
+        else:
+            x, (st_all, cv_all) = jax.lax.scan(step, x, xs,
+                                               unroll=runtime_flags.unroll())
+            cache = dict(cache, state=st_all, conv=cv_all)
+
+    x = _apply_norm(cfg, params.get("final_norm"), x)
+    logits = unembed(params["embed"], x)
+    cache = dict(cache, pos=pos + 1)
+    return logits, cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kv_chunk", "extra_cache"))
+def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
+            extra_cache: int = 0):
+    """Full forward that also *builds* the KV/state caches.
+
+    Returns (last-token logits [B,1,V], cache).  For attention families
+    the per-layer K/V streams are emitted from the layer scan; for SSM
+    the chunked scan's final state is the cache.  ``extra_cache`` pads
+    the ring-buffer capacity so the next ``extra_cache`` decode steps
+    append without evicting (decode ring-writes at ``pos % capacity``).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed(params["embed"], tokens)
+    fam = cfg.family
+    cache = init_cache(cfg, batch=B, seq_len=S + extra_cache)
+
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        if fam == "encdec":
+            src = batch["src_embeds"]
+            enc_pos = jnp.broadcast_to(jnp.arange(src.shape[1]), src.shape[:2])
+
+            def enc_step(h, lp):
+                h, _ = _dense_block(lp, h, cfg, 0, positions=enc_pos,
+                                    causal=False, kv_chunk=kv_chunk)
+                return h, None
+
+            enc_out, _ = jax.lax.scan(enc_step, src, params["enc_layers"],
+                                      unroll=runtime_flags.unroll())
+            enc_out = _apply_norm(cfg, params.get("enc_final_norm"), enc_out)
+
+        if fam == "vlm":
+            vis = batch["vision_embeds"]
+
+            def cross_kv(cp):
+                return _project_kv(cp["attn"], vis, cfg)
+
+            ck, cv = jax.vmap(cross_kv)(params["cross"])
+            cache = dict(cache, ck=ck.astype(KV_DTYPE), cv=cv.astype(KV_DTYPE))
+
+        def step(carry, xs):
+            h = carry
+            if fam == "encdec":
+                lp, cp = xs
+                idx = 0
+            else:
+                lp, idx = xs
+            hn = _apply_norm(cfg, lp.get("norm1"), h)
+            k_c, v_c = apply_rope_kv_for_cache(lp["attn"], hn, cfg, positions)
+            h, _ = _dense_block(lp, h, cfg, idx, positions=positions,
+                                causal=True, kv_chunk=kv_chunk)
+            if fam == "encdec":
+                c = cross_attention(
+                    cp["attn"], _apply_norm(cfg, cp.get("norm"), h), enc_out,
+                    cfg, kv_chunk=kv_chunk,
+                )
+                h = h + c
+                ck_c, cv_c = _project_kv(cp["attn"], enc_out, cfg)
+                return h, (k_c.astype(KV_DTYPE), v_c.astype(KV_DTYPE),
+                           ck_c.astype(KV_DTYPE), cv_c.astype(KV_DTYPE))
+            if fam == "vlm" and cfg.cross_attn_every:
+                every = cfg.cross_attn_every
+                def with_cross(h):
+                    ci = jnp.maximum((idx + 1) // every - 1, 0)
+                    cp2 = jax.tree.map(lambda a_: a_[ci], params["cross"])
+                    return h + cross_attention(
+                        cp2["attn"], _apply_norm(cfg, cp2.get("norm"), h),
+                        batch["vision_embeds"], cfg, kv_chunk=kv_chunk,
+                    )
+                h = jax.lax.cond((idx + 1) % every == 0, with_cross,
+                                 lambda h: h, h)
+            return h, (k_c.astype(KV_DTYPE), v_c.astype(KV_DTYPE))
+
+        def pad_seq(a):
+            if extra_cache:
+                return jnp.pad(
+                    a, ((0, 0), (0, 0), (0, extra_cache), (0, 0), (0, 0))
+                )
+            return a
+
+        if fam == "encdec":
+            x, ys = jax.lax.scan(step, x, (params["layers"], params["dec_cross"]),
+                                 unroll=runtime_flags.unroll())
+            cache = dict(cache, k=pad_seq(ys[0]), v=pad_seq(ys[1]),
+                         ck=ys[2], cv=ys[3])
+        else:
+            x, ys = jax.lax.scan(
+                step, x, (params["layers"], jnp.arange(cfg.n_layers)),
+                unroll=runtime_flags.unroll(),
+            )
+            cache = dict(cache, k=pad_seq(ys[0]), v=pad_seq(ys[1]))
+
+    elif fam in ("ssm", "hybrid"):
+        every = cfg.hybrid_attn_every
+
+        def step(carry, xs):
+            if fam == "hybrid" and every:
+                h, ak, av = carry
+            else:
+                h = carry
+            lp, idx = xs
+            hn = _apply_norm(cfg, lp.get("norm1"), h)
+            y, (st, cv) = mamba_forward(lp["mamba"], hn, cfg, return_state=True)
+            cv = cv.astype(KV_DTYPE)
+            h = h + y
+            if fam == "hybrid" and every:
+                def with_attn(args):
+                    h, ak, av = args
+                    ai = jnp.maximum((idx + 1) // every - 1, 0)
+                    hn2 = _apply_norm(cfg, params.get("shared_norm1"), h)
+                    k_c, v_c = _project_kv(params["shared_attn"], hn2, cfg)
+                    k_c = apply_rope(k_c, positions, cfg.rope_theta)
+                    h = _shared_attn_block(params, h, cfg, positions=positions,
+                                           kv_chunk=kv_chunk)
+                    ak = jax.lax.dynamic_update_index_in_dim(
+                        ak, k_c.astype(KV_DTYPE), ai, 0
+                    )
+                    av = jax.lax.dynamic_update_index_in_dim(
+                        av, v_c.astype(KV_DTYPE), ai, 0
+                    )
+                    return h, ak, av
+                h, ak, av = jax.lax.cond(
+                    (idx + 1) % every == 0, with_attn, lambda a: a, (h, ak, av)
+                )
+                return (h, ak, av), (st, cv)
+            return h, (st, cv)
+
+        if fam == "hybrid" and every:
+            (x, ak, av), (st_all, cv_all) = jax.lax.scan(
+                step, (x, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.n_layers)),
+                unroll=runtime_flags.unroll(),
+            )
+            cache = dict(cache, k=ak, v=av, state=st_all, conv=cv_all)
+        else:
+            x, (st_all, cv_all) = jax.lax.scan(
+                step, x, (params["layers"], jnp.arange(cfg.n_layers)),
+                unroll=runtime_flags.unroll(),
+            )
+            cache = dict(cache, state=st_all, conv=cv_all)
+
+    x = _apply_norm(cfg, params.get("final_norm"), x)
+    logits = unembed(params["embed"], x[:, -1:, :])
+    cache = dict(cache, pos=jnp.asarray(S, jnp.int32))
+    return logits, cache

@@ -1,0 +1,71 @@
+"""Process-wide lowering flags.
+
+UNROLL: passed as ``unroll=`` to every structural ``lax.scan`` (layers,
+microbatches, KV chunks, SSD chunks).  The default (1) keeps scans
+rolled — small HLO, fast 512-device compiles.  The roofline *probe*
+(benchmarks/roofline.py) sets ``True`` on reduced-depth configs so
+``compiled.cost_analysis()`` counts every iteration exactly (XLA counts
+a while-loop body once; see EXPERIMENTS.md §Roofline / methodology).
+"""
+UNROLL = 1
+
+
+def set_unroll(v):
+    global UNROLL
+    UNROLL = v
+
+
+def unroll():
+    return UNROLL
+
+
+#: §Perf iteration 5 — MoE dispatch groups.  1 = single global
+#: counting-sort over all tokens (baseline).  Set to the data-parallel
+#: degree so each shard sorts only its LOCAL tokens (the paper's
+#: thread-private counters): the global argsort's cross-device
+#: all-gather disappears and capacity becomes per-group (standard
+#: per-device capacity semantics).
+MOE_GROUPS = 1
+
+
+def set_moe_groups(g: int):
+    global MOE_GROUPS
+    MOE_GROUPS = g
+
+
+def moe_groups() -> int:
+    return MOE_GROUPS
+
+
+#: §Perf iteration 3 A/B: remat policy for the layer scans.
+#: "full"  = plain jax.checkpoint (recompute everything in backward)
+#: "dots"  = dots_with_no_batch_dims_saveable (save MXU outputs)
+REMAT = "full"  # §Perf iter-3 verdict: "dots" cut compute 8%/collective 10%
+# but grew the dominant memory term (saved MXU outputs) and temp memory;
+# "full" is the default, "dots" stays available for compute-bound cells.
+
+
+def set_remat(v: str):
+    global REMAT
+    REMAT = v
+
+
+def remat() -> str:
+    return REMAT
+
+
+#: §Perf iteration 7 — explicit shard_map MoE dispatch.  When set to a
+#: (mesh, dp_axes) tuple, moe_ffn routes dispatch+combine through
+#: shard_map over the data axes so the scatter/gather stay device-local
+#: by construction (GSPMD was observed replicating the vmapped dispatch
+#: buffers).  None = GSPMD-auto (baseline).
+MOE_MESH = None
+
+
+def set_moe_mesh(mesh, dp_axes=("data",)):
+    global MOE_MESH
+    MOE_MESH = None if mesh is None else (mesh, tuple(dp_axes))
+
+
+def moe_mesh():
+    return MOE_MESH

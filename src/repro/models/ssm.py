@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): the
+sequence is split into chunks of Q tokens; within a chunk the recurrence
+is computed in its *dual* quadratic-attention form (MXU-friendly), and
+a short ``lax.scan`` over chunk states carries the recurrence across
+chunks.  Decode is the O(1) recurrent update.
+
+Shapes: H ssm heads of head_dim P; state size N; G (=1) B/C groups
+broadcast across heads (the GQA analogue for SSMs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, rmsnorm
+from . import runtime_flags
+
+
+def init_mamba(key, cfg):
+    D = cfg.d_model
+    s = cfg.ssm
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N, W = s.n_groups, s.d_state, s.conv_width
+    conv_ch = di + 2 * G * N
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    return {
+        "in_proj_in": _dense_init(keys[0], D, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(keys[1], (W, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gnorm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj_out": _dense_init(keys[2], di, D, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    D = cfg.d_model
+    s = cfg.ssm
+    di, H = s.d_inner(D), s.n_heads(D)
+    GN = s.n_groups * s.d_state
+    z, xc, B, C, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + GN, 2 * di + 2 * GN], axis=-1
+    )
+    return z, xc, B, C, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width W: [B, S, ch] -> same."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i : i + xBC.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P] inputs; dt: [B, S, H] (softplus'd); A: [H] (<0);
+    Bm, Cm: [B, S, G, N] with G broadcast over H.
+    Returns y: [B, S, H, P] and final state [B, H, N, P].
+    """
+    Bsz, S, H, P = xh.shape
+    G = Bm.shape[2]
+    rep = H // G
+    Q = min(chunk, S)
+    n = -(-S // Q)
+    Sp = n * Q
+    pad = [(0, 0), (0, Sp - S)]
+    xh = jnp.pad(xh, pad + [(0, 0), (0, 0)])
+    dt = jnp.pad(dt, pad + [(0, 0)])
+    Bm = jnp.pad(Bm, pad + [(0, 0), (0, 0)])
+    Cm = jnp.pad(Cm, pad + [(0, 0), (0, 0)])
+
+    xc = xh.reshape(Bsz, n, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, n, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, n, Q, G, Bm.shape[-1]).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, n, Q, G, Cm.shape[-1]).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]              # [B, n, Q, H] (<= 0)
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk inclusive
+    total = cum[:, :, -1, :]                       # [B, n, H]
+
+    # ---- intra-chunk (dual quadratic form)
+    # L[q, k] = exp(cum_q - cum_k) for k <= q else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,n,Q,Q,H]
+    q_idx = jnp.arange(Q)
+    causal = (q_idx[:, None] >= q_idx[None, :])[None, None, :, :, None]
+    # mask the EXPONENT, not the result: the non-causal branch's exp()
+    # overflows and would poison the backward pass (0 * inf = NaN).
+    Lmat = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    Bh = jnp.repeat(Bc, rep, axis=3)               # [B,n,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    # scores[b,n,q,k,h] = (C_q · B_k) * L[q,k,h]
+    scores = jnp.einsum("bnqhN,bnkhN->bnqkh", Ch, Bh) * Lmat
+    xdt = xc * dtc[..., None]                       # [B,n,Q,H,P]
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", scores, xdt)
+
+    # ---- chunk states: S_n = sum_k exp(total - cum_k) B_k (x dt)_k
+    decay_k = jnp.exp(total[:, :, None, :] - cum)   # [B,n,Q,H]
+    states = jnp.einsum("bnkhN,bnkh,bnkhp->bnhNp", Bh, decay_k, xdt)
+
+    # ---- inter-chunk recurrence (sequential scan over n chunks)
+    def step(h, inp):
+        st, tot = inp                                # [B,H,N,P], [B,H]
+        h_new = h * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h                              # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, H, Bh.shape[-1], P), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)),
+        unroll=runtime_flags.unroll(),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)              # [B,n,H,N,P]
+
+    # ---- inter-chunk contribution: C_q · (decay to q) h_prev
+    decay_q = jnp.exp(cum)                           # [B,n,Q,H]
+    y_inter = jnp.einsum("bnqhN,bnqh,bnhNp->bnqhp", Ch, decay_q, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(params, x, cfg, *, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: [B, S, D] -> [B, S, D].
+
+    With ``return_state`` also returns ``(ssm_state [B,H,N,P],
+    conv_state [B,W-1,conv_ch])`` for prefill -> decode handoff.
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    di, H, P = s.d_inner(D), s.n_heads(D), s.head_dim
+    G, N, W = s.n_groups, s.d_state, s.conv_width
+    Bsz, S, _ = x.shape
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj_in"])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    xBC_raw = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    xc, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    xh = xc.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rmsnorm(params["gnorm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj_out"])
+    if return_state:
+        if S >= W - 1:
+            conv_state = xBC_raw[:, S - (W - 1):, :]
+        else:  # degenerate tiny-sequence case (smoke tests)
+            conv_state = jnp.pad(xBC_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, (h_final, conv_state)
+    return out
+
+
+def mamba_decode(params, x, ssm_state, conv_state, cfg):
+    """One-token recurrent update.
+
+    x: [B, 1, D]; ssm_state: [B, H, N, P]; conv_state: [B, W-1, conv_ch].
+    Returns (y [B,1,D], new_ssm_state, new_conv_state).
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    di, H, P = s.d_inner(D), s.n_heads(D), s.head_dim
+    G, N, W = s.n_groups, s.d_state, s.conv_width
+    Bsz = x.shape[0]
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj_in"])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    xBC_new = jnp.concatenate([xc, Bm, Cm], axis=-1)     # [B, 1, ch]
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)  # [B, W, ch]
+    conv_out = jnp.einsum(
+        "bwc,wc->bc", window.astype(jnp.float32),
+        params["conv_w"].astype(jnp.float32),
+    ) + params["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    xc, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(params["a_log"])
+    xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    Bv = jnp.repeat(Bm.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Cv = jnp.repeat(Cm.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A[None, :])                     # [B,H]
+    contrib = jnp.einsum("bhN,bhp->bhNp", Bv, xh * dt[..., None])
+    h_new = ssm_state * decay[..., None, None] + contrib
+    y = jnp.einsum("bhN,bhNp->bhp", Cv, h_new)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(params["gnorm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj_out"])
+    return out, h_new, window[:, 1:, :].astype(conv_state.dtype)

@@ -1,0 +1,10 @@
+"""repro.serve — serving entry points.
+
+The serving primitives live next to the model definitions
+(`repro.models.model`: ``init_cache`` / ``prefill`` / ``decode_step``);
+this package re-exports them as the public serving API and hosts the
+continuous-batching loop (`repro.launch.serve`).
+"""
+from ..models.model import decode_step, init_cache, prefill
+
+__all__ = ["decode_step", "init_cache", "prefill"]

@@ -1,0 +1,5 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state
+from .train_step import TrainConfig, init_train_state, make_train_step
+
+__all__ = ["OptConfig", "TrainConfig", "adamw_update", "init_opt_state",
+           "init_train_state", "make_train_step"]

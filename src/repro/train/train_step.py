@@ -1,0 +1,119 @@
+"""Train step: microbatch accumulation, grad compression w/ error
+feedback, AdamW — all pjit-compatible.
+
+Gradient flow at scale (DESIGN.md §5):
+  1. microbatches scanned with ``lax.scan``; per-microbatch grads are
+     bf16 (param dtype), accumulated into an fp32 buffer;
+  2. the accumulated gradient is *compressed* to bf16 with a classical
+     fp32 error-feedback buffer carried in the train state (the
+     residual of step t is added at step t+1), so the cross-pod
+     all-reduce travels at half width with no long-run drift;
+  3. AdamW consumes the compressed gradient against fp32 master
+     weights (ZeRO-sharded by the param sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import loss_fn
+from .optimizer import OptConfig, adamw_update, init_opt_state
+from ..models import runtime_flags
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    compress_grads: bool = True     # bf16 + error feedback
+    kv_chunk: int = 1024
+
+
+def init_train_state(params, tcfg: TrainConfig) -> dict[str, Any]:
+    state = {
+        "params": params,
+        "opt": init_opt_state(params, tcfg.opt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.compress_grads:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def _split_microbatches(batch, n: int):
+    """[B, ...] -> [n, B//n, ...] for every leaf."""
+    def f(x):
+        B = x.shape[0]
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``cfg`` is the ModelConfig (static); the function is meant to be
+    wrapped in ``jax.jit`` with sharded in/out by the launcher.
+    """
+
+    def train_step(state, batch):
+        params = state["params"]
+        n = tcfg.microbatches
+
+        if n > 1:
+            mbs = _split_microbatches(batch, n)
+
+            def micro(acc, mb):
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, mb, cfg, kv_chunk=tcfg.kv_chunk)
+                )(params)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return acc, loss
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            gacc, losses = jax.lax.scan(micro, acc0, mbs,
+                                        unroll=runtime_flags.unroll())
+            grads32 = jax.tree.map(lambda g: g / n, gacc)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, kv_chunk=tcfg.kv_chunk)
+            )(params)
+            grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        # ---- gradient compression with error feedback
+        if tcfg.compress_grads:
+            with_ef = jax.tree.map(lambda g, e: g + e, grads32, state["ef"])
+            sent = jax.tree.map(lambda g: g.astype(jnp.bfloat16), with_ef)
+            new_ef = jax.tree.map(
+                lambda g, s: g - s.astype(jnp.float32), with_ef, sent
+            )
+            grads_used = sent
+        else:
+            new_ef = state.get("ef")
+            grads_used = grads32
+
+        # cast to param dtype tree so adamw can mirror dtypes
+        grads_used = jax.tree.map(
+            lambda p, g: g.astype(p.dtype), params, grads_used
+        )
+        new_params, new_opt, om = adamw_update(grads_used, state["opt"], tcfg.opt)
+
+        new_state = dict(
+            state, params=new_params, opt=new_opt, step=state["step"] + 1
+        )
+        if tcfg.compress_grads:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss, **om, "step": state["step"]}
+        return new_state, metrics
+
+    return train_step

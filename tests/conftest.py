@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); src/ layout without install.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

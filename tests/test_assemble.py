@@ -1,0 +1,207 @@
+"""Core assembly: paper-exact intermediates + Matlab-semantics oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    COO,
+    assemble_arrays,
+    assemble_fused,
+    assembly_intermediates,
+    coo_from_matlab,
+    fsparse,
+)
+from repro.core.oracle import (
+    dense_oracle,
+    fsparse_listing15,
+    matlab_sparse_oracle,
+)
+from repro.core.ransparse import ransparse
+
+# the paper's running example (Listing 1)
+S_IN = [4, 4, 5, 7, 3, 5, 5, 4, 3, 4, 9, 7, -2]
+I_IN = [3, 4, 1, 3, 2, 1, 4, 4, 4, 3, 2, 3, 1]
+J_IN = [3, 3, 1, 4, 1, 1, 4, 3, 1, 3, 2, 2, 4]
+
+
+class TestPaperRunningExample:
+    def test_listing15_transcription_exact(self):
+        """The literal serial C algorithm reproduces every §2.3 array."""
+        prS, irS, jcS, rank, irank, jrS1 = fsparse_listing15(
+            I_IN, J_IN, S_IN, 4, 4
+        )
+        assert jrS1.tolist() == [0, 3, 5, 9, 13]          # §2.3.1
+        assert rank.tolist() == [2, 5, 12, 4, 10, 0, 3, 9, 11, 1, 6, 7, 8]
+        assert irank.tolist() == [5, 6, 0, 8, 1, 0, 9, 6, 2, 5, 3, 4, 7]
+        assert jcS.tolist() == [0, 3, 5, 7, 10]           # §2.3.4
+        assert prS.tolist() == [10, 3, 3, 9, 7, 8, 8, -2, 7, 5]  # eq (2.1)
+        assert irS.tolist() == [0, 1, 3, 1, 2, 2, 3, 0, 2, 3]
+
+    def test_jax_intermediates_match_paper(self):
+        """The TPU adaptation yields the identical rank/irank/jcS."""
+        rows = np.array(I_IN) - 1
+        cols = np.array(J_IN) - 1
+        im = assembly_intermediates(rows, cols, M=4, N=4)
+        assert np.asarray(im.rank).tolist() == [2, 5, 12, 4, 10, 0, 3, 9, 11, 1, 6, 7, 8]
+        assert np.asarray(im.irank).tolist() == [5, 6, 0, 8, 1, 0, 9, 6, 2, 5, 3, 4, 7]
+        assert np.asarray(im.jcS).tolist() == [0, 3, 5, 7, 10]
+        assert int(im.nnz) == 10
+
+    def test_fsparse_matches_eq21(self):
+        S = fsparse(I_IN, J_IN, S_IN)
+        dense = np.asarray(S.to_dense())
+        expected = np.array(
+            [[10, 0, 0, -2], [3, 9, 0, 0], [0, 7, 8, 7], [3, 0, 8, 5]],
+            np.float64,
+        )
+        np.testing.assert_allclose(dense, expected)
+        assert int(S.nnz) == 10
+
+
+def _random_triplets(rng, L, M, N):
+    return (
+        rng.integers(0, M, L).astype(np.int32),
+        rng.integers(0, N, L).astype(np.int32),
+        rng.normal(size=L).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("L,M,N", [(1, 1, 1), (100, 7, 13), (5000, 100, 80),
+                                   (3000, 3000, 2), (64, 1, 64)])
+def test_against_oracle(fused, L, M, N):
+    rng = np.random.default_rng(L * 7 + M)
+    rows, cols, vals = _random_triplets(rng, L, M, N)
+    fn = assemble_fused if fused else assemble_arrays
+    S = fn(rows, cols, vals, M=M, N=N)
+    pr, ir, jc = matlab_sparse_oracle(rows, cols, vals, M, N)
+    nnz = int(S.nnz)
+    assert nnz == len(pr)
+    np.testing.assert_array_equal(np.asarray(S.indices)[:nnz], ir)
+    np.testing.assert_array_equal(np.asarray(S.indptr), jc)
+    np.testing.assert_allclose(np.asarray(S.data)[:nnz], pr, rtol=2e-5, atol=1e-5)
+    # padding is inert
+    assert np.all(np.asarray(S.data)[nnz:] == 0)
+    assert np.all(np.asarray(S.indices)[nnz:] == M)
+
+
+def test_padding_sentinels_ignored():
+    """row == M entries (all_to_all padding) must vanish."""
+    rows = np.array([0, 3, 3, 1, 3], np.int32)  # M == 3 -> two pads
+    cols = np.array([0, 1, 2, 1, 0], np.int32)
+    vals = np.array([1.0, 9.0, 9.0, 2.0, 9.0], np.float32)
+    S = assemble_arrays(rows, cols, vals, M=3, N=3)
+    dense = np.asarray(S.to_dense())
+    assert dense.sum() == pytest.approx(3.0)
+    assert int(S.nnz) == 2
+
+
+def test_ransparse_datasets_shapes():
+    ii, jj, ss, siz = ransparse(100, 5, 3, seed=1)
+    assert len(ii) == 100 * 5 * 3
+    assert ii.min() >= 1 and ii.max() <= 100
+    S = fsparse(ii, jj, ss, (100, 100))
+    ref = dense_oracle(ii - 1, jj - 1, ss, 100, 100)
+    np.testing.assert_allclose(np.asarray(S.to_dense()), ref, rtol=1e-5)
+
+
+class TestMatlabAPI:
+    def test_implicit_shape(self):
+        S = fsparse([2, 5], [3, 1], [1.0, 2.0])
+        assert S.shape == (5, 3)
+
+    def test_nzmax(self):
+        S = fsparse([1, 1, 2], [1, 1, 2], [1.0, 2.0, 3.0], (4, 4), nzmax=8)
+        assert S.nzmax == 8
+        assert int(S.nnz) == 2
+
+    def test_index_expansion_outer(self):
+        """fsparse extension: i column x j row -> outer grid (§2.1)."""
+        S = fsparse([[1], [2]], [1, 2, 3], 1.0, (2, 3))
+        np.testing.assert_allclose(np.asarray(S.to_dense()), np.ones((2, 3)))
+
+    def test_scalar_value_broadcast(self):
+        S = fsparse([1, 2, 3], [1, 2, 3], 5.0, (3, 3))
+        np.testing.assert_allclose(np.asarray(S.to_dense()), 5 * np.eye(3))
+
+    def test_bad_index_raises(self):
+        with pytest.raises(ValueError):
+            fsparse([0, 1], [1, 1], [1.0, 1.0])
+        with pytest.raises(ValueError):
+            fsparse([1.5], [1], [1.0])
+        with pytest.raises(ValueError):
+            fsparse([5], [1], [1.0], (4, 4))
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    M=st.integers(1, 24),
+    N=st.integers(1, 24),
+    L=st.integers(1, 200),
+)
+def test_property_dense_equivalence(data, M, N, L):
+    """assemble == dense scatter-add for arbitrary triplets."""
+    rows = np.array(
+        data.draw(st.lists(st.integers(0, M - 1), min_size=L, max_size=L)),
+        np.int32,
+    )
+    cols = np.array(
+        data.draw(st.lists(st.integers(0, N - 1), min_size=L, max_size=L)),
+        np.int32,
+    )
+    vals = np.array(
+        data.draw(
+            st.lists(
+                st.floats(-10, 10, allow_nan=False, width=32),
+                min_size=L, max_size=L,
+            )
+        ),
+        np.float32,
+    )
+    S = assemble_arrays(rows, cols, vals, M=M, N=N)
+    ref = dense_oracle(rows, cols, vals, M, N)
+    np.testing.assert_allclose(np.asarray(S.to_dense()), ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), L=st.integers(2, 300))
+def test_property_permutation_invariance(seed, L):
+    """Assembly is invariant under permutation of the input triplets."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _random_triplets(rng, L, 17, 11)
+    p = rng.permutation(L)
+    S1 = assemble_arrays(rows, cols, vals, M=17, N=11)
+    S2 = assemble_arrays(rows[p], cols[p], vals[p], M=17, N=11)
+    nnz = int(S1.nnz)
+    assert nnz == int(S2.nnz)
+    np.testing.assert_array_equal(
+        np.asarray(S1.indices)[:nnz], np.asarray(S2.indices)[:nnz]
+    )
+    np.testing.assert_array_equal(np.asarray(S1.indptr), np.asarray(S2.indptr))
+    np.testing.assert_allclose(
+        np.asarray(S1.data)[:nnz], np.asarray(S2.data)[:nnz], rtol=2e-5,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_linearity(seed):
+    """assemble(i, j, a + b).data == (assemble a).data + (assemble b).data."""
+    rng = np.random.default_rng(seed)
+    rows, cols, _ = _random_triplets(rng, 150, 9, 9)
+    va = rng.normal(size=150).astype(np.float32)
+    vb = rng.normal(size=150).astype(np.float32)
+    Sa = assemble_arrays(rows, cols, va, M=9, N=9)
+    Sb = assemble_arrays(rows, cols, vb, M=9, N=9)
+    Sab = assemble_arrays(rows, cols, va + vb, M=9, N=9)
+    np.testing.assert_allclose(
+        np.asarray(Sab.data),
+        np.asarray(Sa.data) + np.asarray(Sb.data),
+        rtol=1e-4, atol=1e-4,
+    )

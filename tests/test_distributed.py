@@ -1,0 +1,180 @@
+"""Distributed paths (shard_map assembly, sharded train) in a subprocess.
+
+These need >1 device; the device count must be fixed *before* jax
+initializes, so each test launches a fresh interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (never set
+globally, per the dry-run contract).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=560,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_assembly_matches_oracle():
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import make_distributed_assemble, make_distributed_spmv
+from repro.core.oracle import dense_oracle
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(data=8, model=1)
+M = N = 96
+rng = np.random.default_rng(0)
+L = 4096
+rows = rng.integers(0, M, L).astype(np.int32)
+cols = rng.integers(0, N, L).astype(np.int32)
+vals = rng.normal(size=L).astype(np.float32)
+sh = NamedSharding(mesh, P("data"))
+fn = make_distributed_assemble(mesh, M=M, N=N, capacity_factor=4.0)
+A, ovf = fn(jax.device_put(rows, sh), jax.device_put(cols, sh),
+            jax.device_put(vals, sh))
+assert not bool(ovf)
+ref = dense_oracle(rows, cols, vals, M, N)
+err = np.abs(np.asarray(A.to_dense()) - ref).max()
+assert err < 1e-4, err
+spmv = make_distributed_spmv(mesh, M=M, N=N)
+x = rng.normal(size=N).astype(np.float32)
+y = np.asarray(spmv(A, jnp.asarray(x)))
+err2 = np.abs(y - ref @ x).max()
+assert err2 < 1e-3, err2
+print("dist-ok")
+""")
+
+
+def test_distributed_assembly_capacity_overflow_flag():
+    run_py("""
+import numpy as np, jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import make_distributed_assemble
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(data=8, model=1)
+M = N = 64
+L = 4096
+# all rows hit row block 0 -> guaranteed bucket overflow at cf=0.1
+rows = np.zeros(L, np.int32)
+cols = np.arange(L, dtype=np.int32) % N
+vals = np.ones(L, np.float32)
+sh = NamedSharding(mesh, P("data"))
+fn = make_distributed_assemble(mesh, M=M, N=N, capacity_factor=0.1)
+A, ovf = fn(jax.device_put(rows, sh), jax.device_put(cols, sh),
+            jax.device_put(vals, sh))
+assert bool(ovf), "overflow must be detected"
+print("overflow-ok")
+""")
+
+
+def test_sharded_train_step_runs_dp_tp():
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import OptConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_specs
+
+cfg = get_config('olmo_1b').reduced(n_layers=2, d_model=64, n_heads=4,
+                                    n_kv_heads=4, d_ff=128, vocab=256)
+mesh = make_host_mesh(data=4, model=2)
+tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0), microbatches=2,
+                   kv_chunk=8)
+with mesh:
+    params = init_model(jax.random.key(0), cfg)
+    state = init_train_state(params, tcfg)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      param_specs(mesh, state))
+    state = jax.device_put(state, sh)
+    step = jax.jit(make_train_step(cfg, tcfg), in_shardings=(sh, None),
+                   out_shardings=(sh, None), donate_argnums=(0,))
+    rng = np.random.default_rng(0)
+    batch = {
+      'tokens': jax.device_put(
+          rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32),
+          NamedSharding(mesh, P('data', None))),
+      'labels': jax.device_put(
+          rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32),
+          NamedSharding(mesh, P('data', None))),
+    }
+    l0 = None
+    for _ in range(6):
+        state, m = step(state, batch)
+        if l0 is None: l0 = float(m['loss'])
+    assert float(m['loss']) < l0, (l0, float(m['loss']))
+print("dp-tp-ok")
+""")
+
+
+def test_sharded_equals_single_device():
+    """DP+TP sharded loss == single-device loss (same params/batch)."""
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.model import init_model, loss_fn
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_specs
+
+cfg = get_config('qwen3_0_6b').reduced(n_layers=2, dtype='float32')
+rng = np.random.default_rng(1)
+batch = {'tokens': rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32),
+         'labels': rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32)}
+params = init_model(jax.random.key(1), cfg)
+l_single = float(loss_fn(params, batch, cfg, kv_chunk=8))
+mesh = make_host_mesh(data=4, model=2)
+with mesh:
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      param_specs(mesh, params))
+    p2 = jax.device_put(params, sh)
+    b2 = jax.tree.map(lambda x: jax.device_put(
+        x, NamedSharding(mesh, P('data', None))), batch)
+    l_shard = float(jax.jit(
+        lambda p, b: loss_fn(p, b, cfg, kv_chunk=8))(p2, b2))
+assert abs(l_single - l_shard) < 1e-3, (l_single, l_shard)
+print("equal-ok")
+""")
+
+
+def test_moe_dispatch_under_sharding():
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.moe import init_moe, moe_ffn
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_specs
+
+cfg = get_config('olmoe_1b_7b').reduced(d_model=64, dtype='float32')
+params = init_moe(jax.random.key(0), cfg)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+y_single, aux_s = moe_ffn(params, x, cfg)
+mesh = make_host_mesh(data=2, model=4)
+with mesh:
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      param_specs(mesh, params))
+    p2 = jax.device_put(params, sh)
+    x2 = jax.device_put(x, NamedSharding(mesh, P('data', None, None)))
+    y_shard, aux_d = jax.jit(lambda p, x: moe_ffn(p, x, cfg))(p2, x2)
+err = float(jnp.max(jnp.abs(y_single - y_shard)))
+assert err < 1e-4, err
+print("moe-shard-ok")
+""")

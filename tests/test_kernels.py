@@ -1,0 +1,173 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracle import matlab_sparse_oracle
+from repro.kernels import (
+    assemble_pallas,
+    block_offsets,
+    blocked_cumsum,
+    counting_sort,
+    csc_to_ell,
+    histogram,
+    segment_sum_sorted,
+    spmv,
+)
+from repro.kernels.counting_sort.ref import counting_sort_ref
+from repro.kernels.hist.ref import block_histogram_ref, histogram_ref
+from repro.kernels.segment_sum.ref import cumsum_ref, segment_sum_sorted_ref
+from repro.kernels.spmv.ref import spmv_ell_ref
+
+
+# ---------------------------------------------------------------------------
+# hist
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L", [1, 17, 1024, 5000])
+@pytest.mark.parametrize("nbins", [1, 5, 512, 700])
+def test_histogram_shapes(L, nbins):
+    rng = np.random.default_rng(L + nbins)
+    keys = jnp.asarray(rng.integers(0, nbins, L), jnp.int32)
+    h = histogram(keys, nbins=nbins, block_b=256)
+    hr = histogram_ref(keys, nbins)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+
+
+def test_block_offsets_are_private_counters():
+    """offsets[b,k] = global start + count in earlier blocks (Listing 9)."""
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 10, 512), jnp.int32)
+    offs, jr = block_offsets(keys, nbins=10, block_b=128)
+    ref = block_histogram_ref(keys, 10, 128)
+    prior = np.cumsum(np.asarray(ref), axis=0) - np.asarray(ref)
+    starts = np.concatenate([[0], np.cumsum(np.asarray(ref).sum(0))])[:-1]
+    np.testing.assert_array_equal(np.asarray(offs), starts[None] + prior)
+    assert int(jr[-1]) == 512
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), L=st.integers(1, 600),
+       nbins=st.integers(1, 64))
+def test_histogram_property(seed, L, nbins):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, nbins, L), jnp.int32)
+    h = histogram(keys, nbins=nbins, block_b=128)
+    assert int(jnp.sum(h)) == L
+
+
+# ---------------------------------------------------------------------------
+# counting sort
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,nbins,block_b", [
+    (100, 8, 64), (1024, 512, 256), (3000, 700, 512), (17, 3, 8),
+])
+def test_counting_sort_vs_ref(L, nbins, block_b):
+    rng = np.random.default_rng(L)
+    keys = jnp.asarray(rng.integers(0, nbins, L), jnp.int32)
+    rank, pos = counting_sort(keys, nbins=nbins, block_b=block_b)
+    rank_r, pos_r = counting_sort_ref(keys)
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rank_r))
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_r))
+
+
+def test_counting_sort_is_stable():
+    keys = jnp.asarray([2, 1, 2, 1, 2, 0, 0], jnp.int32)
+    rank, _ = counting_sort(keys, nbins=3, block_b=4)
+    # equal keys keep original order
+    assert np.asarray(rank).tolist() == [5, 6, 1, 3, 0, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# segment sum / cumsum
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,block", [(10, 8), (1000, 128), (4097, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_blocked_cumsum(L, block, dtype):
+    rng = np.random.default_rng(L)
+    if dtype == jnp.float32:
+        x = jnp.asarray(rng.normal(size=L), dtype)
+    else:
+        x = jnp.asarray(rng.integers(-5, 5, L), dtype)
+    c = blocked_cumsum(x, block_b=block)
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(cumsum_ref(x)), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), L=st.integers(1, 500))
+def test_segment_sum_property(seed, L):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=L), jnp.float32)
+    keys = np.sort(rng.integers(0, max(L // 3, 1), L))
+    first = jnp.asarray(
+        np.concatenate([[True], keys[1:] != keys[:-1]])
+    )
+    ns = L
+    got = segment_sum_sorted(vals, first, num_segments=ns, block_b=64)
+    ref = segment_sum_sorted_ref(vals, first, num_segments=ns)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end kernel assembly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,M,N", [(500, 40, 30), (2048, 256, 256)])
+def test_assemble_pallas_vs_oracle(L, M, N):
+    rng = np.random.default_rng(L)
+    rows = rng.integers(0, M, L).astype(np.int32)
+    cols = rng.integers(0, N, L).astype(np.int32)
+    vals = rng.normal(size=L).astype(np.float32)
+    S = assemble_pallas(rows, cols, vals, M=M, N=N, block_b=256)
+    pr, ir, jc = matlab_sparse_oracle(rows, cols, vals, M, N)
+    nnz = int(S.nnz)
+    assert nnz == len(pr)
+    np.testing.assert_array_equal(np.asarray(S.indices)[:nnz], ir)
+    np.testing.assert_array_equal(np.asarray(S.indptr), jc)
+    np.testing.assert_allclose(np.asarray(S.data)[:nnz], pr, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# spmv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,N,K,block_r", [(64, 48, 8, 32), (300, 300, 16, 128)])
+def test_spmv_ell(M, N, K, block_r):
+    rng = np.random.default_rng(M)
+    cols = jnp.asarray(
+        np.where(rng.random((M, K)) < 0.8, rng.integers(0, N, (M, K)), N),
+        jnp.int32,
+    )
+    vals = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    vals = jnp.where(cols == N, 0.0, vals)
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    y = spmv(cols, vals, x, block_r=block_r)
+    yr = spmv_ell_ref(cols, vals, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_csc_to_ell_roundtrip():
+    from repro.core import fsparse
+    from repro.core.oracle import dense_oracle
+    rng = np.random.default_rng(3)
+    ii = rng.integers(1, 51, 600); jj = rng.integers(1, 41, 600)
+    ss = rng.normal(size=600)
+    A = fsparse(ii, jj, ss, (50, 40))
+    cols, vals, ovf = csc_to_ell(A, max_per_row=40)
+    assert not bool(ovf)
+    x = jnp.asarray(rng.normal(size=40), jnp.float32)
+    y = spmv(cols, vals, x, block_r=32)
+    ref = dense_oracle(ii - 1, jj - 1, ss, 50, 40) @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_csc_to_ell_overflow_detected():
+    from repro.core import fsparse
+    ii = np.ones(10, np.int64); jj = np.arange(1, 11)
+    A = fsparse(ii, jj, np.ones(10), (4, 10))
+    _, _, ovf = csc_to_ell(A, max_per_row=4)
+    assert bool(ovf)

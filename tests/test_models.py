@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests (reduced configs) + layer-level oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig, SHAPES
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    prefill,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _batch_for(cfg, B, S):
+    b = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["src_embeds"] = jnp.asarray(
+            RNG.normal(size=(B, S, cfg.d_model)), jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "vlm":
+        b["vision_embeds"] = jnp.asarray(
+            RNG.normal(size=(B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype),
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward + shapes + finiteness."""
+    cfg = get_config(arch).reduced()
+    B, S = 2, 24
+    params = init_model(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, B, S)
+    logits, aux = forward(params, batch, cfg, kv_chunk=8)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # one gradient step exists and is finite
+    g = jax.grad(lambda p: loss_fn(p, batch, cfg, kv_chunk=8))(params)
+    gn = jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g)
+    ))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = get_config(arch).reduced()
+    B, S = 2, 16
+    params = init_model(jax.random.key(1), cfg)
+    batch = _batch_for(cfg, B, S)
+    _, cache = prefill(params, batch, cfg, kv_chunk=8)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = decode_step(params, cache, tok, cfg)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # serve_step must be iterable: identical treedef/shapes/dtypes
+    ok = jax.tree.map(
+        lambda a, b: a.shape == b.shape and a.dtype == b.dtype, cache, cache2
+    )
+    assert all(jax.tree.leaves(ok))
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_decode_matches_forward_dense():
+    """Greedy decode logits == full forward logits (dense family)."""
+    cfg = get_config("olmo_1b").reduced(n_layers=2, dtype="float32")
+    B, S = 1, 12
+    params = init_model(jax.random.key(2), cfg)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full_logits, _ = forward(params, {"tokens": toks}, cfg, kv_chunk=8)
+    # decode the last token from a prefilled prefix of length S-1;
+    # extra_cache=1 gives the ring buffer a free slot (no eviction).
+    _, cache = prefill(params, {"tokens": toks[:, :-1]}, cfg, kv_chunk=8,
+                       extra_cache=1)
+    dec_logits, _ = decode_step(params, cache, toks[:, -1:], cfg)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[0, 0]),
+        np.asarray(full_logits[0, -1]),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_gemma3_local_global_structure():
+    """Layer l is global iff (l+1) % every == 0; window binds locals."""
+    cfg = get_config("gemma3_1b").reduced(
+        n_layers=4, local_global_every=2, sliding_window=4, dtype="float32"
+    )
+    B, S = 1, 16
+    params = init_model(jax.random.key(3), cfg)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    base, _ = forward(params, {"tokens": toks}, cfg, kv_chunk=8)
+    # perturb a token beyond every local window but within global reach:
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab)
+    pert, _ = forward(params, {"tokens": toks2}, cfg, kv_chunk=8)
+    # the last position sees token 0 only through GLOBAL layers; with
+    # global layers present the logits must differ.
+    assert float(jnp.max(jnp.abs(base[0, -1] - pert[0, -1]))) > 0
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models.moe import moe_dispatch_indices
+    E, C = 4, 2
+    experts = jnp.asarray([0, 0, 0, 0, 1, 2, 3, 3], jnp.int32)
+    slot, load = moe_dispatch_indices(experts, n_experts=E, capacity=C)
+    dropped = np.asarray(slot) >= E * C
+    assert dropped.sum() == 2            # expert 0 got 4 wants, cap 2
+    assert np.asarray(load).tolist() == [4, 1, 1, 2]
+    kept = np.asarray(slot)[~dropped]
+    assert len(set(kept.tolist())) == len(kept)   # slots unique
+
+
+def test_moe_dispatch_slots_are_expert_contiguous():
+    from repro.models.moe import moe_dispatch_indices
+    rng = np.random.default_rng(5)
+    experts = jnp.asarray(rng.integers(0, 8, 256), jnp.int32)
+    C = 64
+    slot, load = moe_dispatch_indices(experts, n_experts=8, capacity=C)
+    s = np.asarray(slot)
+    e = np.asarray(experts)
+    ok = s < 8 * C
+    np.testing.assert_array_equal(s[ok] // C, e[ok])
+
+
+def test_ssm_prefill_state_equals_stepwise():
+    cfg = get_config("mamba2_780m").reduced(n_layers=1, dtype="float32")
+    B, S = 2, 20
+    params = init_model(jax.random.key(4), cfg)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    _, cache = prefill(params, {"tokens": toks}, cfg, kv_chunk=8)
+    # stepwise decode from scratch must reach the same ssm state
+    cache2 = init_cache(cfg, batch=B, seq_len=S)
+    c = cache2
+    for t in range(S):
+        _, c = decode_step(params, c, toks[:, t : t + 1], cfg)
+    # tolerance: the conv cache is stored bf16 (KV_DTYPE), so the
+    # stepwise path accumulates one quantization per token.
+    np.testing.assert_allclose(
+        np.asarray(cache["state"]), np.asarray(c["state"]), rtol=2e-2, atol=5e-3
+    )
+
+
+def test_long_context_applicability_rules():
+    from repro.launch.specs import cell_applicable
+    long = SHAPES["long_500k"]
+    assert cell_applicable(get_config("mamba2_780m"), long)[0]
+    assert cell_applicable(get_config("zamba2_7b"), long)[0]
+    assert cell_applicable(get_config("gemma3_1b"), long)[0]
+    for a in ("qwen3_0_6b", "starcoder2_15b", "olmo_1b", "dbrx_132b",
+              "olmoe_1b_7b", "seamless_m4t_medium", "llama_3_2_vision_11b"):
+        ok, why = cell_applicable(get_config(a), long)
+        assert not ok and "full-attention" in why
+
+
+def test_full_config_dimensions_match_assignment():
+    """Pin the published dims so a refactor cannot silently drift."""
+    expect = {
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+        "mamba2_780m": (48, 1536, 1, 1, 0, 50280),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen3_0_6b": (28, 1024, 16, 8, 3072, 151936),
+        "starcoder2_15b": (40, 6144, 48, 4, 24576, 49152),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "llama_3_2_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+    }
+    for arch, (L, D, H, Hkv, F, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, D, H, Hkv, F, V), arch
+    assert get_config("dbrx_132b").moe.n_experts == 16
+    assert get_config("dbrx_132b").moe.top_k == 4
+    assert get_config("olmoe_1b_7b").moe.n_experts == 64
+    assert get_config("olmoe_1b_7b").moe.top_k == 8
+    assert get_config("mamba2_780m").ssm.d_state == 128
+    assert get_config("zamba2_7b").ssm.d_state == 64

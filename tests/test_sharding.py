@@ -1,0 +1,134 @@
+"""Sharding rules, input specs, and the HLO collective census parser."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.dryrun import collective_census, _bytes_of_shapes
+from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.launch.sharding import (
+    batch_spec,
+    cache_specs,
+    param_specs,
+    spec_for_param,
+)
+from repro.launch.specs import input_specs, train_batch_specs
+from repro.models.config import SHAPES
+from repro.models.model import init_cache
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(data=1, model=1)
+
+
+class FakeMesh:
+    """Mesh stand-in with production axis sizes (no devices needed)."""
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+def test_param_rules(mesh):
+    fm = FakeMesh()
+    assert spec_for_param(fm, "layers/attn/q_in", (16, 1024, 2048)) == \
+        P(None, "data", "model")
+    assert spec_for_param(fm, "layers/attn/o_out", (16, 2048, 1024)) == \
+        P(None, "model", "data")
+    assert spec_for_param(fm, "embed/embedding", (50304, 1024)) == \
+        P("model", None)
+    assert spec_for_param(fm, "layers/moe/gate_ein", (64, 1024, 512)) == \
+        P("model", "data", None)
+    assert spec_for_param(fm, "layers/norm1/scale", (1024,)) == P(None)
+    assert spec_for_param(fm, "opt/master/layers/attn/q_in",
+                          (16, 1024, 2048)) == P(None, "data", "model")
+
+
+def test_param_rules_divisibility_fallback():
+    fm = FakeMesh()
+    # vocab not divisible by 16 -> replicate that dim
+    assert spec_for_param(fm, "embed/embedding", (50281, 1024)) == \
+        P(None, None)
+    # head count smaller than axis -> replicated
+    assert spec_for_param(fm, "layers/mamba/a_log", (7,)) == P(None)
+
+
+def test_cache_specs_batch_vs_sequence_sharding():
+    fm = FakeMesh()
+    cfg = get_config("gemma3_1b")
+    # decode_32k: batch 128 shards on data; gemma kv=1 can't TP-shard,
+    # so the sequence dim goes on "model" (§Perf iteration 8)
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch=128, seq_len=256))
+    specs = cache_specs(fm, cache, cfg, batch=128)
+    assert specs["k"][1] == "data"
+    assert specs["k"][2] == "model"
+    # long_500k: batch 1 -> sequence carries both data and model axes
+    cache1 = jax.eval_shape(lambda: init_cache(cfg, batch=1, seq_len=512 * 16 * 16))
+    specs1 = cache_specs(fm, cache1, cfg, batch=1)
+    assert specs1["k"][1] is None
+    assert specs1["k"][2] == ("data", "model")
+
+
+def test_input_specs_all_cells_construct():
+    for arch in ("qwen3_0_6b", "mamba2_780m", "dbrx_132b",
+                 "seamless_m4t_medium", "llama_3_2_vision_11b", "zamba2_7b"):
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.supports_long_context:
+                with pytest.raises(ValueError):
+                    input_specs(cfg, shape)
+                continue
+            specs = input_specs(cfg, shape)
+            assert specs  # ShapeDtypeStructs only — no allocation
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_train_batch_specs_shapes():
+    cfg = get_config("seamless_m4t_medium")
+    b = train_batch_specs(cfg, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    assert b["src_embeds"].shape == (256, 4096, 1024)
+
+
+def test_collective_census_parser():
+    hlo = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups={}
+  %add.3 = f32[4]{0} add(%a, %b)
+  ROOT %all-gather.7 = bf16[8,128]{1,0} all-gather(%y), dimensions={0}
+  %all-to-all.2 = (s32[16,8]{1,0}, s32[16,8]{1,0}) all-to-all(%p, %q)
+  %collective-permute.9 = f32[64]{0} collective-permute(%z)
+"""
+    c = collective_census(hlo)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["bytes"] == 1024 * 512 * 4
+    assert c["all-gather"]["bytes"] == 8 * 128 * 2
+    assert c["all-to-all"]["count"] == 1
+    assert c["all-to-all"]["bytes"] == 2 * 16 * 8 * 4
+    assert c["collective-permute"]["bytes"] == 64 * 4
+    assert c["total_bytes"] == sum(
+        c[k]["bytes"] for k in ("all-reduce", "all-gather", "all-to-all",
+                                "collective-permute", "reduce-scatter")
+    )
+
+
+def test_bytes_of_shapes_tuple_types():
+    assert _bytes_of_shapes("f32[10,10]") == 400
+    assert _bytes_of_shapes("(bf16[4], u8[8])") == 16
+    assert _bytes_of_shapes("pred[16]") == 16
+    assert _bytes_of_shapes("token[]") == 0
+
+
+def test_batch_spec_b1_fallback(mesh):
+    fm = FakeMesh()
+    assert batch_spec(fm, batch=256) == P(("data",), None)
+    assert batch_spec(fm, batch=1) == P(None, None)
+
+
+def test_mesh_functions_do_not_touch_devices():
+    """make_production_mesh is a function; importing mesh.py is inert."""
+    import repro.launch.mesh as m
+    names = [n for n in dir(m) if not n.startswith("_")]
+    for n in names:
+        assert not isinstance(getattr(m, n), jax.sharding.Mesh)
