@@ -1,0 +1,63 @@
+"""Two-phase payoff: full assembly vs ``SparsePattern.assemble``.
+
+The repeated-assembly FEM workflow (ISSUE 1 / Cuvelier et al.,
+arXiv:1401.3301): the sparsity pattern is fixed across steps, only the
+element values change.  For each Table 4.2 data set this times
+
+  full      plan + fill every call   (what ``fsparse`` does)
+  reuse     fill only, cached plan   (``SparsePattern.assemble``)
+
+both jitted, and reports the reuse speedup — the acceptance criterion
+is >= 2x on CPU.  The symbolic phase's sort is the dominant cost, so
+the gap widens with L and on accelerators.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ransparse import dataset
+from repro.sparse import plan
+
+from .common import row, time_fn
+
+
+def run(scale: float = 0.1, method: str = "jnp"):
+    rows = []
+    for k in (1, 2, 3):
+        ii, jj, ss, siz = dataset(k, seed=42, scale=scale)
+        r_d = jnp.asarray((ii - 1).astype(np.int32))
+        c_d = jnp.asarray((jj - 1).astype(np.int32))
+        v_d = jnp.asarray(ss.astype(np.float32))
+        M = N = siz
+        L = len(ii)
+
+        @jax.jit
+        def full(r, c, v):
+            return plan(r, c, (M, N), method=method).assemble(v)
+
+        pat = jax.jit(
+            lambda r, c: plan(r, c, (M, N), method=method)
+        )(r_d, c_d)
+
+        @jax.jit
+        def reuse(p, v):
+            return p.assemble(v)
+
+        t_full = time_fn(lambda: full(r_d, c_d, v_d))
+        t_reuse = time_fn(lambda: reuse(pat, v_d))
+        speedup = t_full / max(t_reuse, 1e-9)
+        rows.append(row(
+            f"reassemble_set{k}_full", t_full,
+            L=L, size=siz, method=method, speedup=1.0,
+        ))
+        rows.append(row(
+            f"reassemble_set{k}_reuse", t_reuse,
+            speedup=round(speedup, 2),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -12,11 +12,12 @@ keep the CPU container honest; ratios are scale-free to first order.
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import assemble_arrays, assemble_fused
 from repro.core.oracle import matlab_sparse_oracle
 from repro.core.ransparse import DATA_SETS, dataset
+from repro.sparse import plan
 
 from .common import row, time_fn, time_host_fn
 
@@ -35,13 +36,19 @@ def run(scale: float = 0.1):
             lambda: matlab_sparse_oracle(rows_z, cols_z, vals, M, N)
         )
         r_d, c_d, v_d = jnp.asarray(rows_z), jnp.asarray(cols_z), jnp.asarray(vals)
-        t_serial = time_fn(
-            lambda: assemble_arrays(r_d, c_d, v_d, M=M, N=N)
-        )
-        t_fused = time_fn(
-            lambda: assemble_fused(r_d, c_d, v_d, M=M, N=N)
-        )
-        nnz = int(assemble_arrays(r_d, c_d, v_d, M=M, N=N).nnz)
+
+        # one-shot assembly through the method dispatch (plan + fill)
+        @jax.jit
+        def _one_shot_jnp(r, c, v):
+            return plan(r, c, (M, N), method="jnp").assemble(v)
+
+        @jax.jit
+        def _one_shot_fused(r, c, v):
+            return plan(r, c, (M, N), method="fused").assemble(v)
+
+        t_serial = time_fn(lambda: _one_shot_jnp(r_d, c_d, v_d))
+        t_fused = time_fn(lambda: _one_shot_fused(r_d, c_d, v_d))
+        nnz = int(_one_shot_jnp(r_d, c_d, v_d).nnz)
         rows.append(row(
             f"table42_set{k}_oracle", t_oracle,
             L=L, size=siz, nnz=nnz, speedup=1.0,

@@ -4,6 +4,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_table42        Table 4.2   overall speedup vs Matlab-oracle
+  bench_reassemble     §2.3 payoff: cached SparsePattern vs full assembly
   bench_parts          Figs 4.1-4.3 per-part load distribution
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
@@ -27,6 +28,7 @@ def main() -> None:
         bench_access_counts,
         bench_moe_dispatch,
         bench_parts,
+        bench_reassemble,
         bench_spmv,
         bench_stream,
         bench_table42,
@@ -35,6 +37,7 @@ def main() -> None:
     benches = {
         "table42": lambda: bench_table42.run(scale=args.scale),
         "parts": lambda: bench_parts.run(scale=args.scale),
+        "reassemble": lambda: bench_reassemble.run(scale=args.scale),
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),

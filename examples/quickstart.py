@@ -1,38 +1,58 @@
-"""Quickstart: Matlab-compatible sparse assembly in JAX.
+"""Quickstart: Matlab-compatible sparse assembly in JAX, two-phase API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import fsparse, spmv
+from repro.sparse import CSR, convert, find, fsparse, nnz_of, plan, spmv
 from repro.core.oracle import dense_oracle
 
-# --- the paper's running example (Listing 1) ---------------------------
+# --- the paper's running example (Listing 1), Matlab facade ------------
 s = [4, 4, 5, 7, 3, 5, 5, 4, 3, 4, 9, 7, -2]
 i = [3, 4, 1, 3, 2, 1, 4, 4, 4, 3, 2, 3, 1]
 j = [3, 3, 1, 4, 1, 1, 4, 3, 1, 3, 2, 2, 4]
 
 S = fsparse(i, j, s)                      # size implied, duplicates summed
 print("dense:\n", np.asarray(S.to_dense()))
-print("nnz:", int(S.nnz))
+print("nnz:", nnz_of(S))
 print("jcS:", np.asarray(S.indptr))       # [0 3 5 7 10] — as in §2.3.4
+fi, fj, fv = find(S)                      # Matlab [i,j,v] = find(S)
+print("find:", fi.tolist(), fj.tolist(), fv.tolist())
 
-# --- a bigger random assembly, checked against a dense oracle ----------
+# --- two-phase API: plan once, assemble many ----------------------------
+# The FEM workflow: the mesh (sparsity pattern) is fixed, element values
+# change every step.  plan() runs the paper's Parts 1-4 once; assemble()
+# is only the O(L) gather + collision-free scatter — no sorting.
 rng = np.random.default_rng(0)
 L, M, N = 50_000, 2_000, 1_500
-ii = rng.integers(1, M + 1, L)
-jj = rng.integers(1, N + 1, L)
-ss = rng.normal(size=L)
-A = fsparse(ii, jj, ss, (M, N))
-ref = dense_oracle(ii - 1, jj - 1, ss, M, N)
-err = np.abs(np.asarray(A.to_dense()) - ref).max()
-print(f"assembled {L} triplets -> nnz={int(A.nnz)}, max err vs oracle {err:.2e}")
+rows = rng.integers(0, M, L).astype(np.int32)
+cols = rng.integers(0, N, L).astype(np.int32)
+
+pat = plan(rows, cols, (M, N))            # symbolic phase (once)
+for step in range(3):                     # numeric phase (many times)
+    vals = rng.normal(size=L).astype(np.float32)
+    A = pat.assemble(vals)
+    ref = dense_oracle(rows, cols, vals, M, N)
+    err = np.abs(np.asarray(A.to_dense()) - ref).max()
+    print(f"step {step}: reassembled nnz={int(A.nnz)}, "
+          f"max err vs oracle {err:.2e}")
+
+# batched numeric phase: many value vectors, one structure
+vb = rng.normal(size=(4, L)).astype(np.float32)
+Ab = pat.assemble_batch(vb)
+print("batched data shape:", Ab.data.shape)
 
 # --- the matrix is immediately usable: y = A @ x ------------------------
 x = jnp.ones((N,), jnp.float32)
 y = spmv(A, x)
 print("spmv check:", np.abs(np.asarray(y) - ref @ np.ones(N)).max())
+
+# --- format zoo: one protocol, one converter ----------------------------
+R = convert(A, "csr")
+assert isinstance(R, CSR)
+print("csr round-trip err:",
+      np.abs(np.asarray(R.to_dense()) - np.asarray(A.to_dense())).max())
 
 # --- index-expansion extension (outer-product assembly, §2.1) -----------
 E = fsparse([[1], [2], [3]], [1, 2], 7.0, (3, 2))

@@ -1,4 +1,10 @@
-"""repro.core — the paper's sparse assembly as a composable JAX module."""
+"""repro.core — the paper's sparse assembly as a composable JAX module.
+
+The two-phase API (``plan`` / ``SparsePattern``), the format registry,
+and the Matlab facade live in :mod:`repro.sparse`; this package keeps
+the paper-structured building blocks (Parts 1-4, oracles, data sets)
+plus backward-compatible re-exports of the old entry points.
+"""
 from .assemble import (
     AssemblyIntermediate,
     assemble,
@@ -15,15 +21,24 @@ from .csc import CSC, csc_to_dense, spmv, spmv_t
 from .fsparse import fsparse, fsparse_coo
 from .ransparse import DATA_SETS, dataset, ransparse
 
+# two-phase API re-exports (canonical home: repro.sparse); submodule
+# imports keep this safe when repro.sparse itself is mid-initialization
+from ..sparse.formats import CSR, SparseMatrix, convert
+from ..sparse.pattern import SparsePattern, plan, plan_coo
+
 __all__ = [
     "AssemblyIntermediate",
     "COO",
     "CSC",
+    "CSR",
     "DATA_SETS",
+    "SparseMatrix",
+    "SparsePattern",
     "assemble",
     "assemble_arrays",
     "assemble_fused",
     "assembly_intermediates",
+    "convert",
     "coo_from_matlab",
     "coo_to_dense",
     "csc_to_dense",
@@ -34,6 +49,8 @@ __all__ = [
     "part2_rank",
     "part3_unique",
     "part4_finalize",
+    "plan",
+    "plan_coo",
     "ransparse",
     "spmv",
     "spmv_t",

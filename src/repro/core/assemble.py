@@ -196,18 +196,16 @@ def postprocess(
 def assemble_arrays(
     rows, cols, vals, *, M: int, N: int, nzmax: int | None = None
 ) -> CSC:
-    """Assemble zero-offset COO arrays into a padded CSC (4-part path)."""
-    L = rows.shape[0]
-    nzmax = L if nzmax is None else nzmax
-    rows = rows.astype(jnp.int32)
-    cols = cols.astype(jnp.int32)
-    # Part 1 (the pessimistic jrS is consumed by the Pallas placement
-    # kernel; the jnp path folds it into the stable sort)
-    rank = part2_rank(rows, M)
-    perm, first, jc_counts, r_s, _c_s, valid = part3_unique(rows, cols, rank, M, N)
-    jcS, irankP, nnz = part4_finalize(first, jc_counts)
-    prS, irS = postprocess(vals, r_s, irankP, first, valid, perm, nzmax, M)
-    return CSC(data=prS, indices=irS, indptr=jcS, nnz=nnz, shape=(M, N))
+    """Assemble zero-offset COO arrays into a padded CSC (4-part path).
+
+    Thin wrapper over the two-phase core: ``plan(..., method="jnp")``
+    followed by the numeric fill.  Kept (jitted, monolithic signature)
+    for callers that don't reuse the pattern.
+    """
+    from ..sparse.pattern import plan
+
+    nzmax = rows.shape[0] if nzmax is None else nzmax
+    return plan(rows, cols, (M, N), nzmax=nzmax, method="jnp").assemble(vals)
 
 
 @partial(jax.jit, static_argnames=("M", "N", "nzmax"))
@@ -217,32 +215,41 @@ def assemble_fused(
     """Beyond-paper fast path: one fused-key sort instead of two passes.
 
     key = col * (M+1) + row fits int32 when (M+1)*(N+1) < 2^31; for
-    larger matrices we fall back to the two-pass path (int64 keys are
-    unavailable without x64 mode).  Halves the number of size-L
-    random-access passes (DESIGN §2.1) at the cost of a wider sort key.
+    larger matrices the dispatch falls back to the two-pass path (int64
+    keys are unavailable without x64 mode).  Halves the number of
+    size-L random-access passes (DESIGN §2.1) at the cost of a wider
+    sort key.
     """
-    L = rows.shape[0]
-    nzmax = L if nzmax is None else nzmax
-    rows = rows.astype(jnp.int32)
-    cols = cols.astype(jnp.int32)
-    if (M + 1) * (N + 1) >= 2**31:
-        return assemble_arrays(rows, cols, vals, M=M, N=N, nzmax=nzmax)
-    key = cols * jnp.int32(M + 1) + rows
-    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
-    k_s = key[perm]
-    r_s = rows[perm]
-    c_s = cols[perm]
-    valid = r_s < M
-    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
-    first = jnp.logical_and(first, valid)
-    jc_counts = jnp.bincount(jnp.where(first, c_s, N), length=N + 1)[:N].astype(jnp.int32)
-    jcS, irankP, nnz = part4_finalize(first, jc_counts)
-    prS, irS = postprocess(vals, r_s, irankP, first, valid, perm, nzmax, M)
-    return CSC(data=prS, indices=irS, indptr=jcS, nnz=nnz, shape=(M, N))
+    from ..sparse.pattern import plan
+
+    nzmax = rows.shape[0] if nzmax is None else nzmax
+    return plan(rows, cols, (M, N), nzmax=nzmax, method="fused").assemble(vals)
 
 
-def assemble(coo: COO, *, nzmax: int | None = None, fused: bool = False) -> CSC:
-    fn = assemble_fused if fused else assemble_arrays
+def assemble(coo: COO, *, nzmax: int | None = None,
+             fused: bool | None = None, method: str | None = None) -> CSC:
+    """One-shot assembly with backend dispatch.
+
+    ``method`` is the single dispatch point (``"jnp" | "fused" |
+    "pallas"`` — see :mod:`repro.sparse.dispatch`); the boolean
+    ``fused=`` flag is a deprecated alias for ``method="fused"``.
+    """
+    from .compat import resolve_method_arg
+
+    method = resolve_method_arg(fused, method, api="assemble", stacklevel=2)
+    if method == "jnp":
+        fn = assemble_arrays
+    elif method == "fused":
+        fn = assemble_fused
+    elif method == "pallas":
+        from ..kernels.assembly_ops import assemble_pallas
+
+        fn = assemble_pallas
+    else:
+        from ..sparse import plan
+
+        return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax,
+                    method=method).assemble(coo.vals)
     return fn(coo.rows, coo.cols, coo.vals, M=coo.M, N=coo.N, nzmax=nzmax)
 
 

@@ -50,6 +50,10 @@ class COO:
     def __len__(self) -> int:  # pragma: no cover - convenience
         return self.L
 
+    def to_dense(self) -> jax.Array:
+        """Dense scatter-add (duplicates sum; satisfies ``SparseMatrix``)."""
+        return coo_to_dense(self.rows, self.cols, self.vals, M=self.M, N=self.N)
+
 
 def coo_from_matlab(ii, jj, ss, shape=None) -> COO:
     """Build a :class:`COO` from Matlab-style *unit-offset* index vectors.

@@ -35,9 +35,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
-
 from .assemble import assemble_arrays
+from .compat import shard_map
 from .csc import CSC
 
 
@@ -147,7 +146,6 @@ def make_distributed_assemble(
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        check_vma=False,
     )
 
     @jax.jit
@@ -177,7 +175,6 @@ def make_distributed_spmv(mesh: Mesh, *, M: int, N: int, axis: str = "data"):
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
         out_specs=P(axis),
-        check_vma=False,
     )
 
     @jax.jit

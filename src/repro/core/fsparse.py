@@ -1,53 +1,30 @@
-"""Matlab-compatible ``fsparse`` public API.
+"""Deprecated shim — the Matlab facade now lives in ``repro.sparse``.
 
-    >>> S = fsparse(i, j, s)             # size implied by max indices
-    >>> S = fsparse(i, j, s, (m, n))     # explicit size
-    >>> S = fsparse(i, j, s, (m, n), nzmax)
-
-Semantics match Matlab ``sparse``: unit-offset indices, repeated (i, j)
-pairs summed.  Also supports the paper's *index-expansion* extension
-(§2.1): scalar or length-1 broadcasting of any of i/j/s, and rank-2
-index expansion where ``i`` is a column vector and ``j`` a row vector
-(outer-product assembly), as in the full fsparse code.
+``repro.core.fsparse`` predates the two-phase API; it is kept so that
+existing imports keep working.  New code should use
+:mod:`repro.sparse` (``fsparse``/``sparse2``/``plan``) directly; the
+boolean ``fused=`` flag is deprecated in favour of ``method=``.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from .assemble import assemble
-from .coo import COO, coo_from_matlab
+from ..sparse.matlab import expand_indices as _expand  # noqa: F401 (b/c)
+from ..sparse.matlab import fsparse as _fsparse
+from ..sparse.matlab import fsparse_coo as _fsparse_coo
+from .compat import resolve_method_arg
+from .coo import COO
 from .csc import CSC
 
 
-def _expand(ii, jj, ss):
-    """fsparse index-expansion: broadcast i (col), j (row), s to a grid."""
-    ii = np.asarray(ii, dtype=np.float64)
-    jj = np.asarray(jj, dtype=np.float64)
-    ss = np.asarray(ss, dtype=np.float64)
-    if ii.ndim <= 1 and jj.ndim <= 1 and ii.size == jj.size:
-        if ss.size == 1:
-            ss = np.full(ii.shape, float(ss.ravel()[0]))
-        return ii.ravel(), jj.ravel(), ss.ravel()
-    # outer-product expansion: i column (ni,), j row (nj,) -> grid (ni, nj)
-    ii2 = ii.reshape(-1, 1)
-    jj2 = jj.reshape(1, -1)
-    grid_i = np.broadcast_to(ii2, (ii2.shape[0], jj2.shape[1]))
-    grid_j = np.broadcast_to(jj2, (ii2.shape[0], jj2.shape[1]))
-    if ss.size == 1:
-        grid_s = np.full(grid_i.shape, float(ss))
-    else:
-        grid_s = np.broadcast_to(ss.reshape(grid_i.shape), grid_i.shape)
-    return grid_i.ravel(), grid_j.ravel(), grid_s.ravel()
-
-
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, fused: bool = False) -> CSC:
+            *, fused: bool | None = None, method: str | None = None) -> CSC:
     """Assemble a sparse matrix from Matlab-style triplet data."""
-    ii, jj, ss = _expand(ii, jj, ss)
-    coo = coo_from_matlab(ii, jj, ss, shape=shape)
-    return assemble(coo, nzmax=nzmax, fused=fused)
+    return _fsparse(ii, jj, ss, shape, nzmax,
+                    method=resolve_method_arg(fused, method, api="fsparse"))
 
 
-def fsparse_coo(coo: COO, nzmax: int | None = None, *, fused: bool = False) -> CSC:
+def fsparse_coo(coo: COO, nzmax: int | None = None,
+                *, fused: bool | None = None,
+                method: str | None = None) -> CSC:
     """Zero-offset COO entry point (jit-friendly; no host validation)."""
-    return assemble(coo, nzmax=nzmax, fused=fused)
+    return _fsparse_coo(coo, nzmax,
+                        method=resolve_method_arg(fused, method, api="fsparse"))

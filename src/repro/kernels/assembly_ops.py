@@ -1,7 +1,7 @@
 """End-to-end kernel-backed sparse assembly (the TPU production path).
 
-Composes the three Pallas kernels exactly along the paper's part
-structure:
+Composes the Pallas kernels along the paper's part structure and the
+two-phase API of :mod:`repro.sparse`:
 
   Part 1   hist.block_offsets      (private per-block counters + accum)
   Part 2   counting_sort.placement (row pass)
@@ -9,8 +9,9 @@ structure:
   Part 4   prefix over column counts (tiny, size N)
   Post     segment_sum.blocked_cumsum + contiguous gathers
 
-Falls back numerically to the same results as ``core.assemble``; tests
-assert bit-identical structure vs. the NumPy Matlab oracle.
+``plan_pallas`` is the symbolic phase (reusable ``SparsePattern``);
+``assemble_pallas`` is the one-shot plan + kernel-backed numeric fill.
+Tests assert bit-identical structure vs. the NumPy Matlab oracle.
 """
 from __future__ import annotations
 
@@ -20,8 +21,61 @@ import jax
 import jax.numpy as jnp
 
 from ..core.csc import CSC
-from .counting_sort.ops import counting_sort
+from ..sparse.dispatch import sorted_permutation
+from ..sparse.pattern import SparsePattern, pattern_from_perm
 from .segment_sum.ops import segment_sum_sorted
+
+
+@functools.partial(
+    jax.jit, static_argnames=("M", "N", "nzmax", "block_b", "interpret")
+)
+def plan_pallas(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    M: int,
+    N: int,
+    nzmax: int | None = None,
+    block_b: int = 1024,
+    interpret: bool | None = None,
+) -> SparsePattern:
+    """Symbolic phase with both counting-sort passes in Pallas kernels."""
+    L = rows.shape[0]
+    nzmax = L if nzmax is None else nzmax
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    perm = sorted_permutation(
+        rows, cols, M=M, N=N, method="pallas",
+        block_b=block_b, interpret=interpret,
+    )
+    return pattern_from_perm(rows, cols, perm, M=M, N=N, nzmax=nzmax)
+
+
+def fill_pallas(
+    pattern: SparsePattern,
+    vals: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> CSC:
+    """Numeric phase with the Pallas sorted-segment-sum for the reduce.
+
+    Duplicates are adjacent in the plan's sorted stream, so the paper's
+    colliding scatter-add becomes a segment sum — deterministic and
+    parallel ("reduction ... in a fully independent manner").
+    """
+    first = pattern.first
+    valid = pattern.slot < pattern.nzmax
+    v_s = jnp.where(valid, vals[pattern.perm], 0.0)
+    totals = segment_sum_sorted(
+        v_s, first, num_segments=pattern.nzmax, interpret=interpret
+    )
+    return CSC(
+        data=totals,
+        indices=pattern.indices,
+        indptr=pattern.indptr,
+        nnz=pattern.nnz,
+        shape=pattern.shape,
+    )
 
 
 @functools.partial(
@@ -39,48 +93,8 @@ def assemble_pallas(
     interpret: bool | None = None,
 ) -> CSC:
     """Padded-CSC assembly with all size-L passes in Pallas kernels."""
-    L = rows.shape[0]
-    nzmax = L if nzmax is None else nzmax
-    rows = rows.astype(jnp.int32)
-    cols = cols.astype(jnp.int32)
-
-    # Parts 1+2: counting sort by row (padding row==M sorts last)
-    rank, _pos = counting_sort(
-        rows, nbins=M + 1, block_b=block_b, interpret=interpret
+    pattern = plan_pallas(
+        rows, cols, M=M, N=N, nzmax=nzmax,
+        block_b=block_b, interpret=interpret,
     )
-    # Part 3: stable counting sort of the row-ranked stream by column
-    cols_ranked = cols[rank]
-    rank2, _ = counting_sort(
-        cols_ranked, nbins=N + 1, block_b=block_b, interpret=interpret
-    )
-    perm = rank[rank2]
-    r_s = rows[perm]
-    c_s = cols[perm]
-    valid = r_s < M
-    first = jnp.concatenate(
-        [
-            jnp.ones((1,), bool),
-            jnp.logical_or(c_s[1:] != c_s[:-1], r_s[1:] != r_s[:-1]),
-        ]
-    )
-    first = jnp.logical_and(first, valid)
-
-    # Part 4: column pointer (size-N pass, stays in XLA)
-    jc_counts = jnp.bincount(jnp.where(first, c_s, N), length=N + 1)[:N]
-    jcS = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(jc_counts).astype(jnp.int32)]
-    )
-    nnz = jcS[-1].astype(jnp.int32)
-
-    # Post-processing: sorted-stream segment sum (Pallas cumsum inside)
-    v_s = jnp.where(valid, vals[perm], 0.0)
-    totals = segment_sum_sorted(
-        v_s, first, num_segments=nzmax, interpret=interpret
-    )
-    slot = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
-    irS = (
-        jnp.full((nzmax,), M, jnp.int32)
-        .at[jnp.where(first, slot, nzmax)]
-        .set(r_s.astype(jnp.int32), mode="drop")
-    )
-    return CSC(data=totals, indices=irS, indptr=jcS, nnz=nnz, shape=(M, N))
+    return fill_pallas(pattern, vals, interpret=interpret)

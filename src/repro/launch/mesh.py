@@ -17,15 +17,24 @@ two-level counter accumulation, at datacenter scale).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit-sharding API; absent on 0.4.x
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` kwarg when the running jax supports it, else {}."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):
@@ -33,10 +42,7 @@ def make_host_mesh(*, data: int | None = None, model: int = 1):
     n = len(jax.devices())
     if data is None:
         data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kwargs(2))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

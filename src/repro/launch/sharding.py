@@ -122,6 +122,9 @@ def batch_specs_for(mesh: Mesh, batch_tree, *, batch: int):
 def cache_specs(mesh: Mesh, cache, cfg, *, batch: int):
     """KV/state cache specs.  batch==1 (long-context) shards *sequence*."""
     dp = batch_axes(mesh)
+    # singleton axis tuples are unwrapped so spec entries compare as
+    # plain axis names ("data", not ("data",))
+    dp = dp[0] if isinstance(dp, tuple) and len(dp) == 1 else dp
     dp_ok = _fits(mesh, dp, batch)
     tp_ok_kv = _fits(mesh, "model", cfg.n_kv_heads)
     H_ssm = cfg.ssm.n_heads(cfg.d_model) if cfg.family in ("ssm", "hybrid") else 0
@@ -155,7 +158,8 @@ def cache_specs(mesh: Mesh, cache, cfg, *, batch: int):
                 # drop by the TP degree.
                 seq_axes.append("model")
             if seq_axes:
-                spec[2] = tuple(seq_axes)
+                spec[2] = seq_axes[0] if len(seq_axes) == 1 \
+                    else tuple(seq_axes)
             return P(*spec)
         if name == "state":                      # [L, B, H, N, P]
             spec = [None] * nd

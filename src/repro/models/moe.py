@@ -162,8 +162,9 @@ def moe_ffn_shardmap(params, x, cfg, mesh, dp_axes):
     ``model``) crosses shards.  This removes GSPMD's replicated
     dispatch buffers observed in the probe HLO.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..core.compat import shard_map
 
     B, S, D = x.shape
     E, K = cfg.moe.n_experts, cfg.moe.top_k
@@ -199,7 +200,6 @@ def moe_ffn_shardmap(params, x, cfg, mesh, dp_axes):
         out_specs=(P(dp_axes, None, None, None), P(dp_axes, None),
                    P(dp_axes, None, None), P(dp_axes, None),
                    P(dp_axes, None)),
-        check_vma=False,
     )
     xs, slot, gate_vals, load, sum_probs = dispatch(params["router"], x)
 
@@ -226,7 +226,6 @@ def moe_ffn_shardmap(params, x, cfg, mesh, dp_axes):
         in_specs=(P(dp_axes, None, None, None), P(dp_axes, None),
                   P(dp_axes, None, None)),
         out_specs=P(dp_axes, None, None, None),
-        check_vma=False,
     )
     y = combine(out, slot, gate_vals).reshape(B, S, D)
 

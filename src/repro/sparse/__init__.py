@@ -1,0 +1,82 @@
+"""repro.sparse — the two-phase sparse assembly API.
+
+Symbolic phase (once per sparsity structure):
+
+    >>> pat = plan(rows, cols, (M, N))          # Parts 1-4, the sort
+    >>> pat = plan(rows, cols, (M, N), method="fused")   # or "pallas"
+
+Numeric phase (many times — no sorting, O(L) gather + scatter):
+
+    >>> A  = pat.assemble(vals)                 # padded CSC
+    >>> As = pat.assemble_batch(vals_batch)     # [B, nzmax] data
+
+One-shot convenience (plan + fill), format conversions, and the
+Matlab-compat facade (``fsparse``/``sparse2``/``find``/``nnz_of``)
+ride on top.  Backend selection everywhere is the single ``method=``
+string — see :mod:`repro.sparse.dispatch`.
+"""
+from __future__ import annotations
+
+from ..core.coo import COO, coo_from_matlab
+from ..core.csc import CSC, spmv, spmv_t
+from .dispatch import (
+    available_methods,
+    method_from_fused,
+    register_method,
+    sorted_permutation,
+)
+from .formats import (
+    CSR,
+    SparseMatrix,
+    convert,
+    format_of,
+    register_converter,
+    register_format,
+)
+from .matlab import (
+    find,
+    fsparse,
+    fsparse_coo,
+    nnz_of,
+    plan_cache_clear,
+    plan_cache_info,
+    sparse2,
+)
+from .pattern import SparsePattern, pattern_from_perm, plan, plan_coo
+
+
+def assemble(coo: COO, *, nzmax: int | None = None,
+             method: str = "jnp") -> CSC:
+    """One-shot assembly: ``plan`` + numeric fill in a single call."""
+    return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+
+
+__all__ = [
+    "COO",
+    "CSC",
+    "CSR",
+    "SparseMatrix",
+    "SparsePattern",
+    "assemble",
+    "available_methods",
+    "convert",
+    "coo_from_matlab",
+    "find",
+    "format_of",
+    "fsparse",
+    "fsparse_coo",
+    "method_from_fused",
+    "nnz_of",
+    "pattern_from_perm",
+    "plan",
+    "plan_cache_clear",
+    "plan_cache_info",
+    "plan_coo",
+    "register_converter",
+    "register_format",
+    "register_method",
+    "sorted_permutation",
+    "sparse2",
+    "spmv",
+    "spmv_t",
+]

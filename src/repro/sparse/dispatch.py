@@ -1,0 +1,102 @@
+"""Single backend-dispatch point for the assembly sort strategies.
+
+Every planner/assembler selects its backend through one ``method=``
+string (replacing the old ``fused=`` boolean threading):
+
+  "jnp"    two stable counting sorts (row pass, then column pass) via
+           XLA's stable sort — the paper's Parts 1-3 structure
+  "fused"  one stable sort on the fused key ``col * (M+1) + row``
+           (beyond-paper; falls back to "jnp" when the key overflows
+           int32)
+  "pallas" the Pallas counting-sort kernels (MXU placement) — the TPU
+           production path
+
+All three produce the *identical* (col,row)-ordered permutation with
+duplicates adjacent and padding (``row == M``) last, so the shared
+Parts-3/4 tail (``pattern_from_perm``) and the numeric phase are
+backend-agnostic.
+
+New backends register with :func:`register_method`; consumers go
+through :func:`sorted_permutation` and never branch on the name again.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PermFn = Callable[..., jax.Array]
+
+_METHODS: Dict[str, PermFn] = {}
+
+
+def register_method(name: str, fn: PermFn) -> None:
+    """Register a sort backend: ``fn(rows, cols, *, M, N, **kw) -> perm``."""
+    _METHODS[name] = fn
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_METHODS))
+
+
+def sorted_permutation(
+    rows: jax.Array, cols: jax.Array, *, M: int, N: int,
+    method: str = "jnp", **kwargs
+) -> jax.Array:
+    """(col,row)-stable-ordered permutation via the selected backend."""
+    try:
+        fn = _METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown assembly method {method!r}; "
+            f"available: {available_methods()}"
+        ) from None
+    return fn(rows, cols, M=M, N=N, **kwargs)
+
+
+def method_from_fused(fused: bool | None, method: str | None) -> str:
+    """Back-compat shim: map the deprecated ``fused=`` flag to a method."""
+    if method is not None:
+        return method
+    return "fused" if fused else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+def _perm_jnp(rows, cols, *, M: int, N: int) -> jax.Array:
+    """Two-pass path: stable row sort, then stable column sort (paper)."""
+    del N
+    rank = jnp.argsort(rows, stable=True).astype(jnp.int32)
+    rank2 = jnp.argsort(cols[rank], stable=True).astype(jnp.int32)
+    del M
+    return rank[rank2]
+
+
+def _perm_fused(rows, cols, *, M: int, N: int) -> jax.Array:
+    """Fused-key single sort; int32-overflow falls back to two passes."""
+    if (M + 1) * (N + 1) >= 2**31:
+        return _perm_jnp(rows, cols, M=M, N=N)
+    key = cols * jnp.int32(M + 1) + rows
+    return jnp.argsort(key, stable=True).astype(jnp.int32)
+
+
+def _perm_pallas(rows, cols, *, M: int, N: int,
+                 block_b: int = 1024, interpret: bool | None = None
+                 ) -> jax.Array:
+    """Pallas counting-sort kernels (imported lazily: no hard kernel dep)."""
+    from ..kernels.counting_sort.ops import counting_sort
+
+    rank, _ = counting_sort(
+        rows, nbins=M + 1, block_b=block_b, interpret=interpret
+    )
+    rank2, _ = counting_sort(
+        cols[rank], nbins=N + 1, block_b=block_b, interpret=interpret
+    )
+    return rank[rank2]
+
+
+register_method("jnp", _perm_jnp)
+register_method("fused", _perm_fused)
+register_method("pallas", _perm_pallas)

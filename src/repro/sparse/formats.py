@@ -1,0 +1,181 @@
+"""Unified ``SparseMatrix`` protocol, the CSR format, and a registry.
+
+The format zoo (:class:`~repro.core.coo.COO` triplets, the paper's
+padded :class:`~repro.core.csc.CSC`, and the new :class:`CSR`) is
+unified behind one structural protocol plus a conversion registry, so
+consumers write ``convert(A, "csr")`` instead of format-specific glue.
+
+All formats keep the repo's static-shape discipline: fixed capacity,
+``row == M`` (CSC/COO) or ``col == N`` (CSR) sentinels in the padded
+tail, true ``nnz`` carried as a traced scalar.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coo import COO
+from ..core.csc import CSC, slot_columns
+
+
+@runtime_checkable
+class SparseMatrix(Protocol):
+    """Structural protocol every sparse format satisfies.
+
+    ``shape`` is static python metadata; ``nnz`` is a traced scalar.
+    ``to_dense`` is the universal (if expensive) escape hatch that the
+    conversion fallbacks and the test oracles rely on.
+    """
+
+    shape: Tuple[int, int]
+
+    def to_dense(self) -> jax.Array: ...
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Row-compressed sparse matrix with static capacity.
+
+    data    : float[nzmax]  -- zeros in the padded tail
+    indices : int32[nzmax]  -- zero-offset columns; ``N`` sentinel in tail
+    indptr  : int32[M+1]    -- row pointer; indptr[M] == nnz
+    nnz     : int32 scalar
+    shape   : (M, N) static
+    """
+
+    data: jax.Array
+    indices: jax.Array
+    indptr: jax.Array
+    nnz: jax.Array
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nzmax(self) -> int:
+        return int(self.data.shape[-1])
+
+    @property
+    def M(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.shape[1])
+
+    def to_dense(self) -> jax.Array:
+        rows = slot_columns(self.indptr, self.nzmax)  # row of each slot
+        valid = self.indices < self.N
+        r = jnp.where(valid, jnp.clip(rows, 0, self.M - 1), 0)
+        c = jnp.where(valid, self.indices, 0)
+        v = jnp.where(valid, self.data, 0.0)
+        return jnp.zeros(self.shape, self.data.dtype).at[r, c].add(v)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+FORMATS: Dict[str, type] = {}
+_CONVERTERS: Dict[Tuple[type, str], Callable] = {}
+
+
+def register_format(name: str, cls: type) -> None:
+    FORMATS[name] = cls
+
+
+def register_converter(src: type, target: str, fn: Callable) -> None:
+    """``fn(matrix, **kwargs) -> matrix`` converting ``src`` to ``target``."""
+    _CONVERTERS[(src, target)] = fn
+
+
+def format_of(A) -> str:
+    for name, cls in FORMATS.items():
+        if isinstance(A, cls):
+            return name
+    raise TypeError(f"{type(A).__name__} is not a registered sparse format")
+
+
+def convert(A, target: str, **kwargs):
+    """Convert any registered format to ``target`` (COO is the hub).
+
+    Direct converters are preferred; otherwise the conversion routes
+    through COO triplets (every format can produce and consume them).
+    """
+    if target not in FORMATS:
+        raise ValueError(f"unknown format {target!r}; known: {sorted(FORMATS)}")
+    if isinstance(A, FORMATS[target]):
+        return A
+    direct = _CONVERTERS.get((type(A), target))
+    if direct is not None:
+        return direct(A, **kwargs)
+    if target != "coo":
+        hub = convert(A, "coo")
+        return convert(hub, target, **kwargs)
+    raise TypeError(f"no conversion path {type(A).__name__} -> {target!r}")
+
+
+# ---------------------------------------------------------------------------
+# Built-in conversions (COO is the hub format)
+# ---------------------------------------------------------------------------
+def csc_to_coo(A: CSC) -> COO:
+    cols = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < A.M
+    return COO(
+        rows=jnp.where(valid, A.indices, A.M).astype(jnp.int32),
+        cols=jnp.where(valid, jnp.clip(cols, 0, A.N - 1), 0).astype(jnp.int32),
+        vals=jnp.where(valid, A.data, 0.0),
+        shape=A.shape,
+    )
+
+
+def csr_to_coo(A: CSR) -> COO:
+    rows = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < A.N
+    return COO(
+        rows=jnp.where(valid, jnp.clip(rows, 0, A.M - 1), A.M).astype(jnp.int32),
+        cols=jnp.where(valid, A.indices, 0).astype(jnp.int32),
+        vals=jnp.where(valid, A.data, 0.0),
+        shape=A.shape,
+    )
+
+
+def coo_to_csc(A: COO, *, nzmax: int | None = None,
+               method: str = "jnp") -> CSC:
+    from .pattern import plan
+
+    pat = plan(A.rows, A.cols, A.shape, nzmax=nzmax, method=method)
+    return pat.assemble(A.vals)
+
+
+def coo_to_csr(A: COO, *, nzmax: int | None = None,
+               method: str = "jnp") -> CSR:
+    """CSR of A == CSC of Aᵀ with the index arrays reinterpreted.
+
+    Assembling the transposed triplets orders data by (row, col) of A;
+    the transpose's CSC row indices are A's column indices and its
+    column pointer is A's row pointer.  The transpose's ``row == N``
+    padding sentinel is exactly CSR's ``col == N`` sentinel.
+    """
+    from .pattern import plan
+
+    M, N = A.shape
+    # translate the COO padding convention (row == M) into the transposed
+    # frame's sentinel (row_t == N) so padded entries stay dropped
+    valid = A.rows < M
+    rows_t = jnp.where(valid, A.cols, N)
+    cols_t = jnp.where(valid, A.rows, 0)
+    pat = plan(rows_t, cols_t, (N, M), nzmax=nzmax, method=method)
+    t = pat.assemble(A.vals)
+    return CSR(data=t.data, indices=t.indices, indptr=t.indptr,
+               nnz=t.nnz, shape=(M, N))
+
+
+register_format("coo", COO)
+register_format("csc", CSC)
+register_format("csr", CSR)
+register_converter(CSC, "coo", csc_to_coo)
+register_converter(CSR, "coo", csr_to_coo)
+register_converter(COO, "csc", coo_to_csc)
+register_converter(COO, "csr", coo_to_csr)

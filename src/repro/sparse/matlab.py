@@ -1,0 +1,131 @@
+"""Matlab-compatibility facade over the two-phase core.
+
+Thin wrappers with Matlab ``sparse``/fsparse semantics (unit-offset
+indices, duplicate summing, the paper's §2.1 index-expansion extension),
+all implemented on :func:`repro.sparse.plan` + ``SparsePattern``:
+
+  fsparse(i, j, s, [shape], [nzmax], method=...)   one-shot assembly
+  sparse2(i, j, s, ...)                            assembly with a
+      host-side cache of hot symbolic plans — repeated calls with the
+      same index vectors skip Parts 1-4 entirely (SuiteSparse's
+      ``sparse2`` spirit: same contract as ``sparse``, faster)
+  find(S)                                          (i, j, v) unit-offset
+  nnz_of(S)                                        python-int nnz
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from ..core.coo import COO, coo_from_matlab
+from ..core.csc import CSC, slot_columns
+from .pattern import SparsePattern, plan_coo
+
+
+def expand_indices(ii, jj, ss):
+    """fsparse index-expansion (§2.1): broadcast i (col), j (row), s."""
+    ii = np.asarray(ii, dtype=np.float64)
+    jj = np.asarray(jj, dtype=np.float64)
+    ss = np.asarray(ss, dtype=np.float64)
+    if ii.ndim <= 1 and jj.ndim <= 1 and ii.size == jj.size:
+        if ss.size == 1:
+            ss = np.full(ii.shape, float(ss.ravel()[0]))
+        return ii.ravel(), jj.ravel(), ss.ravel()
+    # outer-product expansion: i column (ni,), j row (nj,) -> grid (ni, nj)
+    ii2 = ii.reshape(-1, 1)
+    jj2 = jj.reshape(1, -1)
+    grid_i = np.broadcast_to(ii2, (ii2.shape[0], jj2.shape[1]))
+    grid_j = np.broadcast_to(jj2, (ii2.shape[0], jj2.shape[1]))
+    if ss.size == 1:
+        grid_s = np.full(grid_i.shape, float(ss))
+    else:
+        grid_s = np.broadcast_to(ss.reshape(grid_i.shape), grid_i.shape)
+    return grid_i.ravel(), grid_j.ravel(), grid_s.ravel()
+
+
+def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
+            *, method: str = "jnp") -> CSC:
+    """Assemble a sparse matrix from Matlab-style triplet data.
+
+    >>> S = fsparse(i, j, s)             # size implied by max indices
+    >>> S = fsparse(i, j, s, (m, n))     # explicit size
+    >>> S = fsparse(i, j, s, (m, n), nzmax, method="fused")
+    """
+    ii, jj, ss = expand_indices(ii, jj, ss)
+    coo = coo_from_matlab(ii, jj, ss, shape=shape)
+    return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+
+
+def fsparse_coo(coo: COO, nzmax: int | None = None,
+                *, method: str = "jnp") -> CSC:
+    """Zero-offset COO entry point (jit-friendly; no host validation)."""
+    return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+
+
+# ---------------------------------------------------------------------------
+# sparse2 — pattern-caching assembly (the serving-cache seed)
+# ---------------------------------------------------------------------------
+_PLAN_CACHE: "OrderedDict[tuple, SparsePattern]" = OrderedDict()
+_PLAN_CACHE_CAPACITY = 32
+
+
+def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method):
+    return (rows.tobytes(), cols.tobytes(), rows.shape, tuple(shape),
+            nzmax, method)
+
+
+def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
+            *, method: str = "jnp") -> CSC:
+    """``fsparse`` with symbolic-plan reuse across calls.
+
+    Same contract and results as :func:`fsparse`; repeated calls whose
+    index vectors (and shape/nzmax/method) are identical hit a small
+    host-side LRU of :class:`SparsePattern` plans and run only the
+    O(L) numeric phase.  This is the repeated-assembly FEM workflow
+    (fixed mesh, changing element values) as a drop-in call.
+    """
+    ii, jj, ss = expand_indices(ii, jj, ss)
+    coo = coo_from_matlab(ii, jj, ss, shape=shape)
+    key = _cache_key(np.asarray(coo.rows), np.asarray(coo.cols),
+                     coo.shape, nzmax, method)
+    pat = _PLAN_CACHE.get(key)
+    if pat is None:
+        pat = plan_coo(coo, nzmax=nzmax, method=method)
+        _PLAN_CACHE[key] = pat
+        while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
+            _PLAN_CACHE.popitem(last=False)
+    else:
+        _PLAN_CACHE.move_to_end(key)
+    return pat.assemble(coo.vals)
+
+
+def plan_cache_info() -> dict:
+    """Introspection for tests/ops: size + capacity of the sparse2 cache."""
+    return {"size": len(_PLAN_CACHE), "capacity": _PLAN_CACHE_CAPACITY}
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Matlab query helpers
+# ---------------------------------------------------------------------------
+def find(S: CSC):
+    """Matlab ``[i, j, v] = find(S)``: unit-offset triplets of nonzeros.
+
+    Host-side (numpy) — the columnwise, row-ascending order matches
+    Matlab's.  Structural zeros (cancelled duplicates) are reported,
+    exactly like fsparse/sparse keep them.
+    """
+    nnz = int(S.nnz)
+    cols = np.asarray(slot_columns(S.indptr, S.nzmax))[:nnz]
+    rows = np.asarray(S.indices)[:nnz]
+    vals = np.asarray(S.data)[:nnz]
+    return rows + 1, cols + 1, vals
+
+
+def nnz_of(S) -> int:
+    """Matlab ``nnz(S)`` — structural nonzero count as a python int."""
+    return int(S.nnz)

@@ -1,0 +1,239 @@
+"""Two-phase assembly: symbolic ``SparsePattern`` plans + numeric fills.
+
+The paper's intermediate format (§2.3, eq. 2.2-2.3) exists precisely so
+that the expensive index analysis can run **once** while the numeric
+scatter/reduce is redone many times — the dominant FEM pattern, where
+the mesh (hence the sparsity structure) is fixed and only element
+values change.
+
+``plan(rows, cols, shape)`` runs Parts 1-4 once and captures everything
+the numeric phase needs:
+
+  perm    : int32[L]      (col,row)-ordered traversal permutation
+                          (= the paper's ``rank[rank2]`` composition)
+  slot    : int32[L]      output slot of the k-th element of the sorted
+                          stream (the parallel paper's ``irankP``,
+                          eq. 3.1); padding entries point at ``nzmax``
+                          so one ``mode="drop"`` scatter discards them
+  indices : int32[nzmax]  final CSC row indices ``irS`` (structure is
+                          value-independent, so it is baked at plan time)
+  indptr  : int32[N+1]    accumulated column pointer ``jcS``
+  nnz     : int32 scalar  structural nonzero count
+
+``SparsePattern.assemble(vals)`` is then only the O(L) gather +
+collision-free scatter-add — no sorting, no histogramming:
+
+    data = zeros(nzmax).at[slot].add(vals[perm], mode="drop")
+
+The dataclass is pytree-registered with only ``shape`` static, so plans
+pass freely through ``jax.jit`` / ``jax.vmap`` / ``lax.scan`` carries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coo import COO
+from ..core.csc import CSC
+from .dispatch import sorted_permutation
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparsePattern:
+    """Symbolic assembly plan — the paper's intermediate format, cached.
+
+    All array fields are length-``L`` or length-``nzmax`` with static
+    shapes; ``row == M`` input sentinels were already routed to the
+    drop slot, so the numeric phase needs no masking branches.
+    """
+
+    perm: jax.Array     # int32[L]
+    slot: jax.Array     # int32[L]; nzmax marks dropped (padding) inputs
+    indices: jax.Array  # int32[nzmax]; M sentinel in the padded tail
+    indptr: jax.Array   # int32[N+1]
+    nnz: jax.Array      # int32 scalar
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    # -- static geometry --------------------------------------------------
+    @property
+    def L(self) -> int:
+        return int(self.perm.shape[-1])
+
+    @property
+    def nzmax(self) -> int:
+        return int(self.indices.shape[-1])
+
+    @property
+    def M(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.shape[1])
+
+    # -- paper-fidelity views ---------------------------------------------
+    @property
+    def first(self) -> jax.Array:
+        """Boundary flags of the sorted stream (Part 3 output)."""
+        valid = self.slot < self.nzmax
+        prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), self.slot[:-1]])
+        return jnp.logical_and(valid, self.slot != prev)
+
+    def irank(self) -> jax.Array:
+        """Original-input-order output slots — the paper's eq. (2.2-2.3)."""
+        return jnp.zeros((self.L,), jnp.int32).at[self.perm].set(
+            jnp.minimum(self.slot, self.nzmax - 1)
+        )
+
+    # -- numeric phase ----------------------------------------------------
+    def assemble(self, vals: jax.Array) -> CSC:
+        """Numeric fill: O(L) gather + collision-free scatter-add.
+
+        ``vals`` must be the value vector aligned with the ``rows``/
+        ``cols`` this plan was built from (length L, any float dtype).
+        """
+        data = self.scatter(vals)
+        return CSC(
+            data=data,
+            indices=self.indices,
+            indptr=self.indptr,
+            nnz=self.nnz,
+            shape=self.shape,
+        )
+
+    def assemble_batch(self, vals_batch: jax.Array) -> CSC:
+        """Vectorized fill of many value vectors sharing this structure.
+
+        Returns a :class:`CSC` whose ``data`` carries a leading batch
+        axis ``[B, nzmax]`` while ``indices``/``indptr``/``nnz`` stay
+        unbatched (the structure is shared by construction).  Consume
+        with ``jax.vmap(f, in_axes=(CSC(data=0, indices=None, ...),))``
+        or by indexing ``out.data[b]``.
+        """
+        data = jax.vmap(self.scatter)(vals_batch)
+        return CSC(
+            data=data,
+            indices=self.indices,
+            indptr=self.indptr,
+            nnz=self.nnz,
+            shape=self.shape,
+        )
+
+    def scatter(self, vals: jax.Array) -> jax.Array:
+        """The raw O(L) numeric kernel: ``data`` array only (``prS``)."""
+        if vals.shape[-1] != self.L:
+            raise ValueError(
+                f"vals has length {vals.shape[-1]} but this pattern was "
+                f"planned for L={self.L} triplets"
+            )
+        # complex/float dtypes pass through (Matlab sparse is double or
+        # complex); integer vals are promoted once, not silently truncated
+        dtype = vals.dtype if jnp.issubdtype(vals.dtype, jnp.inexact) \
+            else jnp.float32
+        return (
+            jnp.zeros((self.nzmax,), dtype)
+            .at[self.slot]
+            .add(vals[self.perm].astype(dtype), mode="drop")
+        )
+
+    def reduce_rows(self, mat: jax.Array) -> jax.Array:
+        """Segment-reduce a row-per-triplet matrix ``[L, D] -> [nzmax, D]``.
+
+        The generalization of :meth:`scatter` to vector-valued triplets
+        (e.g. embedding-gradient rows); duplicates of the same (i, j)
+        pair sum row-wise into one slot.
+        """
+        if mat.shape[0] != self.L:
+            raise ValueError(
+                f"mat has {mat.shape[0]} rows but this pattern was "
+                f"planned for L={self.L} triplets"
+            )
+        return (
+            jnp.zeros((self.nzmax,) + mat.shape[1:], mat.dtype)
+            .at[self.slot]
+            .add(mat[self.perm], mode="drop")
+        )
+
+
+def pattern_from_perm(
+    rows: jax.Array,
+    cols: jax.Array,
+    perm: jax.Array,
+    *,
+    M: int,
+    N: int,
+    nzmax: int,
+) -> SparsePattern:
+    """Parts 3-4 on an already (col,row)-ordered permutation.
+
+    Shared tail of every planning backend (jnp / fused / pallas): the
+    sort strategies differ only in how ``perm`` is produced.
+    """
+    r_s = rows[perm]
+    c_s = cols[perm]
+    valid = r_s < M
+    first = jnp.concatenate(
+        [
+            jnp.ones((1,), bool),
+            jnp.logical_or(c_s[1:] != c_s[:-1], r_s[1:] != r_s[:-1]),
+        ]
+    )
+    first = jnp.logical_and(first, valid)
+    jc_counts = jnp.bincount(
+        jnp.where(first, c_s, N), length=N + 1
+    )[:N].astype(jnp.int32)
+    jcS = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(jc_counts).astype(jnp.int32)]
+    )
+    nnz = jcS[-1].astype(jnp.int32)
+    irankP = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
+    slot = jnp.where(valid, irankP, nzmax).astype(jnp.int32)
+    indices = (
+        jnp.full((nzmax,), M, jnp.int32)
+        .at[jnp.where(first, irankP, nzmax)]
+        .set(r_s.astype(jnp.int32), mode="drop")
+    )
+    return SparsePattern(
+        perm=perm.astype(jnp.int32),
+        slot=slot,
+        indices=indices,
+        indptr=jcS,
+        nnz=nnz,
+        shape=(M, N),
+    )
+
+
+@partial(jax.jit, static_argnames=("shape", "nzmax", "method"))
+def plan(
+    rows: jax.Array,
+    cols: jax.Array,
+    shape: tuple[int, int],
+    *,
+    nzmax: int | None = None,
+    method: str = "jnp",
+) -> SparsePattern:
+    """Symbolic phase: run the paper's Parts 1-4 once, capture the plan.
+
+    ``rows``/``cols`` are zero-offset int arrays of equal length L
+    (``row == shape[0]`` marks padding).  ``method`` selects the sort
+    backend (``"jnp" | "fused" | "pallas"`` — see ``repro.sparse.dispatch``).
+    The result is reusable for any number of :meth:`SparsePattern.assemble`
+    calls with different value vectors.
+    """
+    M, N = int(shape[0]), int(shape[1])
+    L = rows.shape[0]
+    nzmax = L if nzmax is None else nzmax
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    perm = sorted_permutation(rows, cols, M=M, N=N, method=method)
+    return pattern_from_perm(rows, cols, perm, M=M, N=N, nzmax=nzmax)
+
+
+def plan_coo(coo: COO, *, nzmax: int | None = None,
+             method: str = "jnp") -> SparsePattern:
+    """``plan`` over a :class:`repro.core.COO` container."""
+    return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 from functools import partial
 
+from ..sparse import pattern_from_perm
+
 
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _embed_impl(table, tokens, meta):
@@ -40,30 +42,22 @@ def _bwd(meta, res, g):
     tokens = res
     tok = tokens.reshape(-1).astype(jnp.int32)          # [T]
     gm = g.reshape(-1, D).astype(jnp.float32)           # [T, D]
-    # Part 1+2: counting sort by token id (stable)
-    order = jnp.argsort(tok, stable=True)
-    tok_s = tok[order]
-    gm_s = gm[order]
-    # Part 3: boundary flags -> segment ids (duplicates now adjacent)
-    first = jnp.concatenate([jnp.ones((1,), bool), tok_s[1:] != tok_s[:-1]])
-    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
-    T = tok.shape[0]
-    # Post: segment reduce (collision-free), then unique-row scatter
-    summed = jax.ops.segment_sum(
-        gm_s, seg, num_segments=T, indices_are_sorted=True
-    )
-    row_of_seg = (
-        jnp.full((T,), V, jnp.int32)   # V = drop sentinel for empty segments
-        .at[jnp.where(first, seg, T)]
-        .set(tok_s, mode="drop")
-    )
+    # The token stream is a degenerate assembly problem: triplets
+    # (token_id, 0) over a (V, 1) matrix.  With a single column the
+    # (col,row) order IS the row order, so ONE stable sort (the paper's
+    # Part 1+2) feeds the shared Parts-3/4 tail directly; reduce_rows()
+    # is the collision-free segment reduce into unique-token slots.
+    perm = jnp.argsort(tok, stable=True).astype(jnp.int32)
+    pat = pattern_from_perm(tok, jnp.zeros_like(tok), perm,
+                            M=V, N=1, nzmax=tok.shape[0])
+    summed = pat.reduce_rows(gm)                        # [T, D] slot sums
+    # pat.indices holds the unique token of each slot (V sentinel in the
+    # padded tail -> dropped): ONE collision-free scatter of unique rows.
     dtable = (
         jnp.zeros((V, D), jnp.float32)
-        .at[row_of_seg]
+        .at[pat.indices]
         .add(summed, mode="drop")
     )
-    # rows of dtable touched at most once per segment id -> the .add is
-    # collision-free except for the padding target, dropped by mode.
     return dtable.astype(jnp.dtype(dtype)), None
 
 
