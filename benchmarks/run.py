@@ -5,6 +5,8 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_table42        Table 4.2   overall speedup vs Matlab-oracle
   bench_reassemble     §2.3 payoff: cached SparsePattern vs full assembly
+  bench_shard_reassemble  §3 payoff: cached ShardedPattern vs one-shot
+                       sharded assembly over a multi-device host mesh
   bench_parts          Figs 4.1-4.3 per-part load distribution
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
@@ -29,6 +31,7 @@ def main() -> None:
         bench_moe_dispatch,
         bench_parts,
         bench_reassemble,
+        bench_shard_reassemble,
         bench_spmv,
         bench_stream,
         bench_table42,
@@ -38,6 +41,9 @@ def main() -> None:
         "table42": lambda: bench_table42.run(scale=args.scale),
         "parts": lambda: bench_parts.run(scale=args.scale),
         "reassemble": lambda: bench_reassemble.run(scale=args.scale),
+        "shard_reassemble": lambda: bench_shard_reassemble.run(
+            scale=args.scale
+        ),
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),

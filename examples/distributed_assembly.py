@@ -1,15 +1,18 @@
 """Distributed sparse assembly across 8 devices (paper §3 at mesh scale).
 
 Self-re-executes with XLA_FLAGS for 8 host devices (the flag must be
-set before jax initializes).  Shows the three phases of the distributed
-algorithm: per-device histograms + psum (Part 1), capacity-bounded
-all_to_all routing to row-block owners, local assembly per device —
-then a distributed SpMV on the block-row result.
+set before jax initializes).  Shows the sharded two-phase split: one
+``plan_sharded`` call runs Phase A (per-device histograms + psum +
+exclusive device scan), Phase B (capacity-bounded all_to_all routing)
+and Phase C (per-row-block symbolic assembly); every subsequent
+``assemble`` is only the O(L/p) value shuffle + collision-free scatter.
+Then a distributed SpMV on the block-row result.
 
     PYTHONPATH=src python examples/distributed_assembly.py
 """
 import os
 import sys
+import time
 
 if os.environ.get("_REPRO_DIST_DEMO") != "1":
     env = dict(os.environ)
@@ -20,47 +23,58 @@ if os.environ.get("_REPRO_DIST_DEMO") != "1":
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import (
-    make_distributed_assemble,
-    make_distributed_spmv,
-)
 from repro.core.oracle import dense_oracle
 from repro.core.ransparse import ransparse
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_data_mesh
+from repro.sparse import convert, nnz_of, plan_sharded
 
-mesh = make_host_mesh(data=8, model=1)
+mesh = make_data_mesh()
 print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
 M = N = 512
 ii, jj, ss, _ = ransparse(M, 12, 2, seed=0)
 rng = np.random.default_rng(1)
-ss = rng.normal(size=ii.shape)
 rows = (ii - 1).astype(np.int32)
 cols = (jj - 1).astype(np.int32)
-vals = ss.astype(np.float32)
+vals = rng.normal(size=ii.shape).astype(np.float32)
 print(f"{len(rows)} raw triplets -> {M}x{N} matrix, "
       f"sharded over the 'data' axis ({len(rows)//8} per device)")
 
-sh = NamedSharding(mesh, P("data"))
-assemble = make_distributed_assemble(mesh, M=M, N=N, capacity_factor=3.0)
-A, overflow = assemble(
-    jax.device_put(rows, sh), jax.device_put(cols, sh),
-    jax.device_put(vals, sh),
-)
+# --- symbolic phase: Phases A-C, once --------------------------------------
+t0 = time.perf_counter()
+pat = plan_sharded(rows, cols, (M, N), mesh=mesh, capacity_factor=3.0)
+jax.block_until_ready(pat.send_slot)
+print(f"planned in {1e3*(time.perf_counter()-t0):.1f} ms: "
+      f"p={pat.p}, capacity={pat.capacity}/bucket, "
+      f"block loads = {np.asarray(pat.block_load[0]).tolist()}")
+print(f"capacity overflow: {bool(pat.any_overflow())}")
+
+# --- numeric phase: O(L/p) fills, many times -------------------------------
+A = pat.assemble(jnp.asarray(vals))
 print(f"assembled: {A.n_blocks} row blocks x {A.rows_per_block} rows, "
-      f"per-block nnz = {np.asarray(A.nnz).tolist()}")
-print(f"capacity overflow: {bool(overflow)}")
+      f"per-block nnz = {np.asarray(A.nnz).tolist()} "
+      f"(total {nnz_of(A)})")
 
 ref = dense_oracle(rows, cols, vals, M, N)
 err = np.abs(np.asarray(A.to_dense()) - ref).max()
 print(f"max err vs dense oracle: {err:.2e}")
 
-spmv = make_distributed_spmv(mesh, M=M, N=N)
+vals2 = rng.normal(size=ii.shape).astype(np.float32)
+A2 = pat.assemble(jnp.asarray(vals2))     # same structure, new values
+ref2 = dense_oracle(rows, cols, vals2, M, N)
+err_reuse = np.abs(np.asarray(A2.to_dense()) - ref2).max()
+print(f"plan-reuse fill err: {err_reuse:.2e}")
+
+# --- consumers: sharded SpMV + registry conversion -------------------------
 x = rng.normal(size=N).astype(np.float32)
-y = np.asarray(spmv(A, jnp.asarray(x)))
+y = np.asarray(A @ jnp.asarray(x))        # per-block shared CSC kernel tail
 err2 = np.abs(y - ref @ x).max()
 print(f"distributed spmv err: {err2:.2e}")
-assert err < 1e-4 and err2 < 1e-3
+
+C = convert(A, "csc")                     # block-row -> Matlab layout
+err3 = np.abs(np.asarray(C.to_dense()) - ref).max()
+print(f"convert(A, 'csc') err: {err3:.2e}")
+
+assert err < 1e-4 and err_reuse < 1e-4 and err2 < 1e-3 and err3 < 1e-4
 print("OK")

@@ -1,185 +1,61 @@
-"""Distributed sparse assembly — the paper's §3, devices instead of threads.
+"""DEPRECATED shim — distributed assembly lives in :mod:`repro.sparse.sharded`.
 
-The OpenMP version keeps *thread-private* counters (``jrS[k]``,
-``jcS[k]``), one barrier, and a hierarchical accumulation; work is then
-re-split by *row blocks* so dedup and reduction are lock-free.  On a TPU
-mesh the same algebra becomes:
+The one-shot factories below re-run the full symbolic analysis
+(histogram, all_to_all routing, sort) on *every* call — exactly the
+repeated-assembly waste the paper's intermediate format (§2.3) exists
+to avoid.  New code should plan once and fill many times:
 
-  Phase A (paper Part 1 / Listing 9):
-      per-device local histogram over the global row space, then
-      ``psum`` across the ``data`` axis  == the "accumulate jrS over
-      the threads" loop.  An exclusive scan over *device index* (via
-      an all-gather of the per-device histograms) gives each device its
-      private base offsets == "determine a private jrS for each thread".
+    >>> from repro.sparse import plan_sharded
+    >>> pat = plan_sharded(rows, cols, (M, N), mesh=mesh)   # Phases A-C once
+    >>> A = pat.assemble(vals)                              # O(L/p) per fill
+    >>> A2 = pat.assemble(other_vals)                       # no re-analysis
 
-  Phase B (row-block redistribution):
-      device d owns rows [d*M/p, (d+1)*M/p).  A capacity-bounded
-      ``all_to_all`` routes every triplet to its row-block owner —
-      shared memory is replaced by the interconnect.  Overflowing a
-      capacity bucket is detected and reported (like nzmax).
-
-  Phase C (paper Parts 2-4 + post, Listing 10/11/17):
-      each device runs the *serial* index-based assembly on its local
-      row block (full column range) — identical code path as
-      ``assemble_arrays``.  The result is a block-row partitioned CSC.
-
-The output :class:`ShardedCSC` keeps per-device padded CSC blocks plus
-the global ``nnz``; ``spmv`` on it needs only an ``all_gather`` of the
-input vector (columns are global) — rows are already owned.
+This module is kept for backward compatibility only and will be removed
+once no callers remain; :class:`ShardedCSC` is re-exported from its new
+home so existing isinstance checks keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from .assemble import assemble_arrays
-from .compat import shard_map
-from .csc import CSC
+from jax.sharding import Mesh
 
+from ..sparse.sharded import ShardedCSC, _sharded_spmv, plan_sharded
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class ShardedCSC:
-    """Block-row partitioned CSC: leading axis = device shards."""
-
-    data: jax.Array      # [p, cap] values
-    indices: jax.Array   # [p, cap] *local* row within the block; rows_per_block = padding
-    indptr: jax.Array    # [p, N+1]
-    nnz: jax.Array       # [p] per-block nnz
-    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def n_blocks(self) -> int:
-        return int(self.data.shape[0])
-
-    @property
-    def rows_per_block(self) -> int:
-        return -(-self.shape[0] // self.n_blocks)
-
-    def to_dense(self) -> jax.Array:
-        M, N = self.shape
-        rpb = self.rows_per_block
-        blocks = []
-        for b in range(self.n_blocks):
-            blk = CSC(
-                data=self.data[b], indices=self.indices[b],
-                indptr=self.indptr[b], nnz=self.nnz[b], shape=(rpb, N),
-            ).to_dense()
-            blocks.append(blk)
-        return jnp.concatenate(blocks, axis=0)[:M]
-
-
-def _route_to_row_blocks(rows, cols, vals, *, M, p, capacity, axis):
-    """Phase B body (runs per device under shard_map, axis name 'data').
-
-    Builds fixed-capacity send buckets for each destination device via a
-    counting-sort by destination (the paper's Part 1+2 applied to the
-    *device* key — bins = devices), then ``all_to_all``.
-    """
-    rpb = -(-M // p)  # rows per block (ceil)
-    L = rows.shape[0]
-    dest = jnp.minimum(rows // rpb, p - 1)
-    dest = jnp.where(rows >= M, p - 1, dest)  # padding -> last block (stays padding)
-    # stable counting sort by destination == paper Part 2 with p bins
-    order = jnp.argsort(dest, stable=True)
-    d_s = dest[order]
-    # position within destination bucket
-    start = jnp.searchsorted(d_s, jnp.arange(p, dtype=d_s.dtype))
-    offset = jnp.arange(L, dtype=jnp.int32) - start[d_s].astype(jnp.int32)
-    overflow = jnp.any(offset >= capacity)
-    # scatter into [p, capacity] buckets, dropping overflow
-    slot = jnp.where(offset < capacity, d_s.astype(jnp.int32) * capacity + offset,
-                     p * capacity)
-    def bucketize(x, fill):
-        buf = jnp.full((p * capacity,), fill, x.dtype)
-        return buf.at[slot].set(x[order], mode="drop").reshape(p, capacity)
-    b_rows = bucketize(jnp.where(rows >= M, M, rows), M)   # M = padding sentinel
-    b_cols = bucketize(cols, 0)
-    b_vals = bucketize(jnp.where(rows >= M, 0.0, vals), 0.0)
-    # exchange: after all_to_all along axis 0, device d holds the
-    # buckets destined to it from every source device.
-    b_rows = jax.lax.all_to_all(b_rows, axis, 0, 0, tiled=True)
-    b_cols = jax.lax.all_to_all(b_cols, axis, 0, 0, tiled=True)
-    b_vals = jax.lax.all_to_all(b_vals, axis, 0, 0, tiled=True)
-    return b_rows.ravel(), b_cols.ravel(), b_vals.ravel(), overflow
+__all__ = ["ShardedCSC", "make_distributed_assemble", "make_distributed_spmv"]
 
 
 def make_distributed_assemble(
     mesh: Mesh, *, M: int, N: int, capacity_factor: float = 2.0,
     axis: str = "data",
 ):
-    """Build a pjit-able distributed assembly over ``mesh[axis]``.
+    """One-shot distributed assembly (deprecated — see module docstring).
 
-    Input COO arrays are sharded over ``axis``; output is a
-    :class:`ShardedCSC` whose blocks live one-per-device.
+    Returns ``dist_assemble(rows, cols, vals) -> (ShardedCSC, overflow)``
+    with the same contract as before; internally it is
+    ``plan_sharded(...)`` + one fill per call.
     """
-    p = mesh.shape[axis]
-    rpb = -(-M // p)
 
-    def _local(rows, cols, vals):
-        # Phase A: private histogram + hierarchical accumulation
-        hist = jnp.bincount(rows, length=M + 1)          # Listing 9 local count
-        hist = jax.lax.psum(hist, axis)                  # accumulate over "threads"
-        # (hist is used by callers for nnz bounds / diagnostics; the
-        # row-block split below is the paper's static row partition.)
-        L = rows.shape[0]
-        capacity = int(capacity_factor * L / p) + 8
-        # round capacity to a multiple of 8 for layout friendliness
-        capacity = -(-capacity // 8) * 8
-        r, c, v, overflow = _route_to_row_blocks(
-            rows, cols, vals, M=M, p=p, capacity=capacity, axis=axis
-        )
-        # Phase C: local serial assembly on the owned row block
-        r_local = jnp.where(r >= M, rpb, r - jax.lax.axis_index(axis) * rpb)
-        r_local = jnp.clip(r_local, 0, rpb)
-        blk = assemble_arrays(r_local, c, v, M=rpb, N=N)
-        return (
-            blk.data[None], blk.indices[None], blk.indptr[None],
-            blk.nnz[None], overflow[None], hist[None],
-        )
-
-    inner = shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-    )
-
-    @jax.jit
     def dist_assemble(rows, cols, vals):
-        data, indices, indptr, nnz, overflow, hist = inner(
-            rows.astype(jnp.int32), cols.astype(jnp.int32), vals
+        pat = plan_sharded(
+            rows, cols, (M, N), mesh=mesh, axis=axis,
+            capacity_factor=capacity_factor,
         )
-        return ShardedCSC(
-            data=data, indices=indices, indptr=indptr, nnz=nnz, shape=(M, N)
-        ), jnp.any(overflow)
+        return pat.assemble(vals), pat.any_overflow()
 
     return dist_assemble
 
 
 def make_distributed_spmv(mesh: Mesh, *, M: int, N: int, axis: str = "data"):
-    """y = A @ x with block-row ShardedCSC A; x replicated, y sharded."""
-    p = mesh.shape[axis]
-    rpb = -(-M // p)
+    """y = A @ x with block-row ShardedCSC A; x replicated, y sharded.
 
-    def _local(data, indices, indptr, nnz, x):
-        blk = CSC(data=data[0], indices=indices[0], indptr=indptr[0],
-                  nnz=nnz[0], shape=(rpb, N))
-        return (blk @ x)[None]
+    Deprecated — ``ShardedCSC`` produced by the sharded plan path
+    carries its mesh and supports ``A.spmv(x)`` / ``A @ x`` directly.
+    """
 
-    inner = shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis),
-    )
-
-    @jax.jit
     def dist_spmv(A: ShardedCSC, x: jax.Array) -> jax.Array:
-        y = inner(A.data, A.indices, A.indptr, A.nnz, x)
-        return y.reshape(-1)[:M]
+        return _sharded_spmv(
+            A.data, A.indices, A.indptr, A.nnz, x,
+            mesh=mesh, axis=axis, shape=(M, N),
+        )
 
     return dist_spmv

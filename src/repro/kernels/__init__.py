@@ -7,7 +7,12 @@ Layout (one directory per kernel, as in DESIGN.md):
   spmv/           padded-ELL SpMV (FEM example)
   assembly_ops    end-to-end kernel-backed assembly
 """
-from .assembly_ops import assemble_pallas, fill_pallas, plan_pallas
+from .assembly_ops import (
+    assemble_pallas,
+    fill_pallas,
+    fill_sharded_pallas,
+    plan_pallas,
+)
 from .common import INTERPRET
 from .counting_sort.ops import counting_sort
 from .hist.ops import block_offsets, histogram
@@ -23,6 +28,7 @@ __all__ = [
     "counting_sort",
     "csc_to_ell",
     "fill_pallas",
+    "fill_sharded_pallas",
     "histogram",
     "plan_pallas",
     "segment_sum_sorted",

@@ -20,9 +20,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from ..core.compat import shard_map
 from ..core.csc import CSC
 from ..sparse.dispatch import sorted_permutation
-from ..sparse.pattern import SparsePattern, pattern_from_perm
+from ..sparse.pattern import SparsePattern, first_flags, pattern_from_perm
+from ..sparse.sharded import ShardedCSC, ShardedPattern, route_values
 from .segment_sum.ops import segment_sum_sorted
 
 
@@ -76,6 +80,58 @@ def fill_pallas(
         nnz=pattern.nnz,
         shape=pattern.shape,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "capacity", "nzb", "interpret"),
+)
+def _fill_sharded_pallas_jit(send_slot, perm, slot, vals, *, mesh, axis,
+                             capacity, nzb, interpret):
+    p = mesh.shape[axis]
+
+    def _local(send_slot, perm, slot, v):
+        buf = route_values(send_slot[0], v, p=p, capacity=capacity,
+                           axis=axis)
+        sl = slot[0]
+        valid = sl < nzb
+        first = first_flags(sl, nzb)
+        v_s = jnp.where(valid[None, :], buf[:, perm[0]], 0.0)
+        data = jax.vmap(
+            lambda vv: segment_sum_sorted(
+                vv, first, num_segments=nzb, interpret=interpret
+            )
+        )(v_s)
+        return data[None]
+
+    return shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(None, axis)),
+        out_specs=P(axis),
+    )(send_slot, perm, slot, vals)
+
+
+def fill_sharded_pallas(
+    pattern: ShardedPattern,
+    vals: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> ShardedCSC:
+    """Numeric phase of a :class:`ShardedPattern` with the kernel tail.
+
+    Same Phase B replay as ``ShardedPattern.assemble`` (bucket scatter +
+    one all_to_all on values), but each row block's reduce runs the
+    Pallas sorted-segment-sum instead of a colliding scatter-add — the
+    distributed fill shares the single-device production kernels.
+    """
+    vals = pattern._pad_vals(jnp.asarray(vals))
+    data = _fill_sharded_pallas_jit(
+        pattern.send_slot, pattern.perm, pattern.slot, vals[None],
+        mesh=pattern.mesh, axis=pattern.axis, capacity=pattern.capacity,
+        nzb=pattern.nzb, interpret=interpret,
+    )
+    return pattern._wrap(data[:, 0])
 
 
 @functools.partial(

@@ -16,6 +16,8 @@ two-level counter accumulation, at datacenter scale).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 try:  # jax >= 0.5 explicit-sharding API; absent on 0.4.x
@@ -35,6 +37,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
+
+
+@functools.lru_cache(maxsize=None)
+def make_data_mesh(n: int | None = None, *, axis: str = "data"):
+    """One-axis mesh over (up to) all present devices.
+
+    The default mesh of the sharded assembly path
+    (``repro.sparse.sharded`` / ``method="sharded"``): sparse assembly
+    only redistributes over one axis, so tensor-parallel structure is
+    irrelevant here.  Memoized — the device set is fixed per process,
+    and hot callers (the ``sparse2`` plan-cache fast path) resolve the
+    default mesh on every call.
+    """
+    n = len(jax.devices()) if n is None else n
+    return jax.make_mesh((n,), (axis,), **_axis_kwargs(1))
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):

@@ -60,6 +60,23 @@ from . import runtime_flags
 KV_DTYPE = jnp.bfloat16
 
 
+def kv_cache_dtype(cfg: "ModelConfig"):
+    """Serving-cache (KV / conv) storage dtype for this model.
+
+    Half-precision models store bf16 (the production regime — the cache
+    read is the decode stream, so halving its bytes matters).  Full-
+    precision models keep their own dtype: quantizing an f32 model's
+    cache to bf16 made ``decode_step`` drift from the chunked forward
+    path by ~3e-3 in the logits (the cache became the lowest-precision
+    link in an otherwise f32 computation, and ``decode_attention``
+    downcast q and the softmax weights to match it).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return KV_DTYPE
+    return dt
+
+
 # ---------------------------------------------------------------------------
 # Per-layer init
 # ---------------------------------------------------------------------------
@@ -327,20 +344,21 @@ def init_cache(cfg: ModelConfig, *, batch: int, seq_len: int):
     Dh = cfg.resolved_head_dim
     Hkv = cfg.n_kv_heads
     fam = cfg.family
+    kvd = kv_cache_dtype(cfg)
     cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
     if fam in ("dense", "moe", "vlm"):
-        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
-        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
     if fam == "encdec":
-        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
-        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
-        cache["ck"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
-        cache["cv"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
+        cache["ck"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
+        cache["cv"] = jnp.zeros((cfg.n_layers, batch, seq_len, Hkv, Dh), kvd)
     if fam == "vlm" and cfg.cross_attn_every:
         n_cross = cfg.n_layers // cfg.cross_attn_every
         V = cfg.n_vision_tokens
-        cache["ck"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), KV_DTYPE)
-        cache["cv"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), KV_DTYPE)
+        cache["ck"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), kvd)
+        cache["cv"] = jnp.zeros((n_cross, batch, V, Hkv, Dh), kvd)
     if fam in ("ssm", "hybrid"):
         s = cfg.ssm
         H = s.n_heads(cfg.d_model)
@@ -349,12 +367,12 @@ def init_cache(cfg: ModelConfig, *, batch: int, seq_len: int):
             (cfg.n_layers, batch, H, s.d_state, s.head_dim), jnp.float32
         )
         cache["conv"] = jnp.zeros(
-            (cfg.n_layers, batch, s.conv_width - 1, conv_ch), KV_DTYPE
+            (cfg.n_layers, batch, s.conv_width - 1, conv_ch), kvd
         )
     if fam == "hybrid" and cfg.hybrid_attn_every:
         n_attn = cfg.n_layers // cfg.hybrid_attn_every
-        cache["k"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), KV_DTYPE)
-        cache["v"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), KV_DTYPE)
+        cache["k"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), kvd)
+        cache["v"] = jnp.zeros((n_attn, batch, seq_len, Hkv, Dh), kvd)
     return cache
 
 
@@ -498,6 +516,7 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     x = embed(params["embed"], tokens)
     fam = cfg.family
+    kvd = kv_cache_dtype(cfg)
     cache = init_cache(cfg, batch=B, seq_len=S + extra_cache)
 
     if fam in ("dense", "moe", "vlm", "encdec"):
@@ -521,7 +540,7 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
                 return _project_kv(cp["attn"], vis, cfg)
 
             ck, cv = jax.vmap(cross_kv)(params["cross"])
-            cache = dict(cache, ck=ck.astype(KV_DTYPE), cv=cv.astype(KV_DTYPE))
+            cache = dict(cache, ck=ck.astype(kvd), cv=cv.astype(kvd))
 
         def step(carry, xs):
             h = carry
@@ -541,8 +560,8 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
                 )
                 h = h + c
                 ck_c, cv_c = _project_kv(cp["attn"], enc_out, cfg)
-                return h, (k_c.astype(KV_DTYPE), v_c.astype(KV_DTYPE),
-                           ck_c.astype(KV_DTYPE), cv_c.astype(KV_DTYPE))
+                return h, (k_c.astype(kvd), v_c.astype(kvd),
+                           ck_c.astype(kvd), cv_c.astype(kvd))
             if fam == "vlm" and cfg.cross_attn_every:
                 every = cfg.cross_attn_every
                 def with_cross(h):
@@ -554,7 +573,7 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
                     )
                 h = jax.lax.cond((idx + 1) % every == 0, with_cross,
                                  lambda h: h, h)
-            return h, (k_c.astype(KV_DTYPE), v_c.astype(KV_DTYPE))
+            return h, (k_c.astype(kvd), v_c.astype(kvd))
 
         def pad_seq(a):
             if extra_cache:
@@ -586,7 +605,7 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
             lp, idx = xs
             hn = _apply_norm(cfg, lp.get("norm1"), h)
             y, (st, cv) = mamba_forward(lp["mamba"], hn, cfg, return_state=True)
-            cv = cv.astype(KV_DTYPE)
+            cv = cv.astype(kvd)
             h = h + y
             if fam == "hybrid" and every:
                 def with_attn(args):
@@ -598,10 +617,10 @@ def prefill(params, batch, cfg: ModelConfig, *, kv_chunk: int = 1024,
                     h = _shared_attn_block(params, h, cfg, positions=positions,
                                            kv_chunk=kv_chunk)
                     ak = jax.lax.dynamic_update_index_in_dim(
-                        ak, k_c.astype(KV_DTYPE), ai, 0
+                        ak, k_c.astype(kvd), ai, 0
                     )
                     av = jax.lax.dynamic_update_index_in_dim(
-                        av, v_c.astype(KV_DTYPE), ai, 0
+                        av, v_c.astype(kvd), ai, 0
                     )
                     return h, ak, av
                 h, ak, av = jax.lax.cond(

@@ -10,6 +10,10 @@ Numeric phase (many times — no sorting, O(L) gather + scatter):
     >>> A  = pat.assemble(vals)                 # padded CSC
     >>> As = pat.assemble_batch(vals_batch)     # [B, nzmax] data
 
+The same split at mesh scale (``plan_sharded`` -> ``ShardedPattern``
+-> block-row ``ShardedCSC``) lives in :mod:`repro.sparse.sharded` and
+is reachable as ``method="sharded"`` from the facade.
+
 One-shot convenience (plan + fill), format conversions, and the
 Matlab-compat facade (``fsparse``/``sparse2``/``find``/``nnz_of``)
 ride on top.  Backend selection everywhere is the single ``method=``
@@ -43,6 +47,12 @@ from .matlab import (
     sparse2,
 )
 from .pattern import SparsePattern, pattern_from_perm, plan, plan_coo
+from .sharded import (
+    ShardedCSC,
+    ShardedPattern,
+    plan_sharded,
+    plan_sharded_coo,
+)
 
 
 def assemble(coo: COO, *, nzmax: int | None = None,
@@ -55,6 +65,8 @@ __all__ = [
     "COO",
     "CSC",
     "CSR",
+    "ShardedCSC",
+    "ShardedPattern",
     "SparseMatrix",
     "SparsePattern",
     "assemble",
@@ -72,6 +84,8 @@ __all__ = [
     "plan_cache_clear",
     "plan_cache_info",
     "plan_coo",
+    "plan_sharded",
+    "plan_sharded_coo",
     "register_converter",
     "register_format",
     "register_method",

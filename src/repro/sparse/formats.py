@@ -112,7 +112,11 @@ def convert(A, target: str, **kwargs):
         return direct(A, **kwargs)
     if target != "coo":
         hub = convert(A, "coo")
-        return convert(hub, target, **kwargs)
+        # the hub leg must be a *direct* converter — recursing again
+        # would loop forever on a target with no from-COO conversion
+        out = _CONVERTERS.get((type(hub), target))
+        if out is not None:
+            return out(hub, **kwargs)
     raise TypeError(f"no conversion path {type(A).__name__} -> {target!r}")
 
 

@@ -24,37 +24,103 @@ from .pattern import SparsePattern, plan_coo
 
 
 def expand_indices(ii, jj, ss):
-    """fsparse index-expansion (§2.1): broadcast i (col), j (row), s."""
+    """fsparse index-expansion (§2.1): broadcast i (col), j (row), s.
+
+    Elementwise mode: equal-length 1-d ``ii``/``jj`` (``ss`` scalar or
+    the same length).  Outer-product mode: explicitly 2-d inputs (a
+    column ``ii`` and a row ``jj``) or a scalar against a vector; ``ss``
+    may be a scalar, the full (ni, nj) grid, a flat vector of ni*nj
+    values, or a broadcastable (ni, 1) / (1, nj) slice.  Anything else
+    raises the Matlab-compatible errors instead of silently expanding
+    or crashing inside ``reshape``.
+    """
     ii = np.asarray(ii, dtype=np.float64)
     jj = np.asarray(jj, dtype=np.float64)
     ss = np.asarray(ss, dtype=np.float64)
-    if ii.ndim <= 1 and jj.ndim <= 1 and ii.size == jj.size:
-        if ss.size == 1:
-            ss = np.full(ii.shape, float(ss.ravel()[0]))
-        return ii.ravel(), jj.ravel(), ss.ravel()
-    # outer-product expansion: i column (ni,), j row (nj,) -> grid (ni, nj)
+    if ii.ndim <= 1 and jj.ndim <= 1:
+        if ii.size == jj.size:
+            if ss.size == 1:
+                ss = np.full(ii.shape, float(ss.ravel()[0]))
+            elif ss.size != ii.size:
+                raise ValueError("vectors must be the same length")
+            return ii.ravel(), jj.ravel(), ss.ravel()
+        if ii.size != 1 and jj.size != 1:
+            # mismatched 1-d vectors are an error in Matlab, not an
+            # implicit outer product (only scalars broadcast)
+            raise ValueError("vectors must be the same length")
+    # outer-product expansion: i column (ni, 1), j row (1, nj) -> (ni, nj)
     ii2 = ii.reshape(-1, 1)
     jj2 = jj.reshape(1, -1)
-    grid_i = np.broadcast_to(ii2, (ii2.shape[0], jj2.shape[1]))
-    grid_j = np.broadcast_to(jj2, (ii2.shape[0], jj2.shape[1]))
+    ni, nj = ii2.shape[0], jj2.shape[1]
+    grid_i = np.broadcast_to(ii2, (ni, nj))
+    grid_j = np.broadcast_to(jj2, (ni, nj))
     if ss.size == 1:
-        grid_s = np.full(grid_i.shape, float(ss))
+        grid_s = np.full((ni, nj), float(ss.ravel()[0]))
+    elif ss.shape == (ni, nj):
+        grid_s = ss
+    elif ss.ndim == 1 and ss.size == ni * nj:
+        grid_s = ss.reshape(ni, nj)
+    elif ss.ndim == 2 and ss.shape in ((ni, 1), (1, nj)):
+        grid_s = np.broadcast_to(ss, (ni, nj))
     else:
-        grid_s = np.broadcast_to(ss.reshape(grid_i.shape), grid_i.shape)
+        raise ValueError(
+            f"cannot expand s of shape {ss.shape} over a ({ni}, {nj}) "
+            f"index grid; expected a scalar, ({ni}, {nj}), ({ni}, 1), "
+            f"(1, {nj}), or a flat vector of {ni * nj} values"
+        )
     return grid_i.ravel(), grid_j.ravel(), grid_s.ravel()
 
 
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str = "jnp") -> CSC:
+            *, method: str = "jnp", mesh=None):
     """Assemble a sparse matrix from Matlab-style triplet data.
 
     >>> S = fsparse(i, j, s)             # size implied by max indices
     >>> S = fsparse(i, j, s, (m, n))     # explicit size
     >>> S = fsparse(i, j, s, (m, n), nzmax, method="fused")
+    >>> S = fsparse(i, j, s, (m, n), method="sharded")   # ShardedCSC
+
+    ``method="sharded"`` runs the distributed path
+    (:mod:`repro.sparse.sharded`) over ``mesh`` (default: one data axis
+    over all devices) and returns a block-row :class:`ShardedCSC`; use
+    ``convert(S, "csc")`` for the Matlab layout.
     """
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
+    if method == "sharded":
+        pat = _plan_sharded_coo(coo, nzmax, mesh)
+        return pat.assemble(coo.vals)
+    _reject_unused_mesh(mesh, method)
     return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+
+
+def _reject_unused_mesh(mesh, method):
+    if mesh is not None:
+        raise ValueError(
+            f"mesh= is only meaningful with method='sharded' "
+            f"(got method={method!r}); the mesh would be silently ignored"
+        )
+
+
+def _plan_sharded_coo(coo: COO, nzmax, mesh):
+    from .sharded import plan_sharded
+
+    if nzmax is not None:
+        raise ValueError(
+            "nzmax is a *global* capacity but sharded storage is "
+            "per-block; pass capacity/nzmax to plan_sharded directly"
+        )
+    pat = plan_sharded(coo.rows, coo.cols, coo.shape, mesh=mesh)
+    # overflow is a plan-time property (structure, not values): check it
+    # once here — a silent drop would return a wrong matrix.  Cache hits
+    # in sparse2 reuse an already-validated plan and skip the sync.
+    if bool(pat.any_overflow()):
+        raise ValueError(
+            "sharded routing bucket overflow: the row distribution is too "
+            "skewed for the default capacity; use plan_sharded(...) with a "
+            "larger capacity_factor/capacity"
+        )
+    return pat
 
 
 def fsparse_coo(coo: COO, nzmax: int | None = None,
@@ -70,13 +136,23 @@ _PLAN_CACHE: "OrderedDict[tuple, SparsePattern]" = OrderedDict()
 _PLAN_CACHE_CAPACITY = 32
 
 
-def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method):
-    return (rows.tobytes(), cols.tobytes(), rows.shape, tuple(shape),
-            nzmax, method)
+def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
+               extra=()):
+    """Structure-identity key for the sparse2 plan cache.
+
+    ``tobytes()`` alone is NOT an identity: two buffers can share bytes
+    while describing different structures (an int64 vector aliases two
+    int32 indices; a transposed expansion shape ravels identically), so
+    the dtypes and *both* shapes are part of the key — a collision here
+    would silently return a plan for the wrong structure.
+    """
+    return (rows.tobytes(), cols.tobytes(),
+            rows.shape, cols.shape, rows.dtype.str, cols.dtype.str,
+            tuple(shape), nzmax, method, extra)
 
 
 def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str = "jnp") -> CSC:
+            *, method: str = "jnp", mesh=None):
     """``fsparse`` with symbolic-plan reuse across calls.
 
     Same contract and results as :func:`fsparse`; repeated calls whose
@@ -84,14 +160,29 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     host-side LRU of :class:`SparsePattern` plans and run only the
     O(L) numeric phase.  This is the repeated-assembly FEM workflow
     (fixed mesh, changing element values) as a drop-in call.
+
+    ``method="sharded"`` caches :class:`~repro.sparse.sharded.ShardedPattern`
+    plans the same way (keyed additionally on the mesh), so repeated
+    distributed assembly pays routing + per-block analysis once.
     """
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
+    extra = ()
+    if method == "sharded":
+        from .sharded import mesh_fingerprint, resolve_mesh
+
+        mesh = resolve_mesh(mesh)
+        extra = mesh_fingerprint(mesh, "data")
+    else:
+        _reject_unused_mesh(mesh, method)
     key = _cache_key(np.asarray(coo.rows), np.asarray(coo.cols),
-                     coo.shape, nzmax, method)
+                     coo.shape, nzmax, method, extra)
     pat = _PLAN_CACHE.get(key)
     if pat is None:
-        pat = plan_coo(coo, nzmax=nzmax, method=method)
+        if method == "sharded":
+            pat = _plan_sharded_coo(coo, nzmax, mesh)
+        else:
+            pat = plan_coo(coo, nzmax=nzmax, method=method)
         _PLAN_CACHE[key] = pat
         while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
             _PLAN_CACHE.popitem(last=False)
@@ -127,5 +218,10 @@ def find(S: CSC):
 
 
 def nnz_of(S) -> int:
-    """Matlab ``nnz(S)`` — structural nonzero count as a python int."""
-    return int(S.nnz)
+    """Matlab ``nnz(S)`` — structural nonzero count as a python int.
+
+    Accepts any registered format whose ``nnz`` is a scalar or (for
+    block-partitioned formats like ``ShardedCSC``) a per-block vector;
+    blocks partition the matrix, so the counts sum.
+    """
+    return int(np.sum(np.asarray(S.nnz)))

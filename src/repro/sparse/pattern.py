@@ -79,9 +79,7 @@ class SparsePattern:
     @property
     def first(self) -> jax.Array:
         """Boundary flags of the sorted stream (Part 3 output)."""
-        valid = self.slot < self.nzmax
-        prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), self.slot[:-1]])
-        return jnp.logical_and(valid, self.slot != prev)
+        return first_flags(self.slot, self.nzmax)
 
     def irank(self) -> jax.Array:
         """Original-input-order output slots — the paper's eq. (2.2-2.3)."""
@@ -157,6 +155,20 @@ class SparsePattern:
             .at[self.slot]
             .add(mat[self.perm], mode="drop")
         )
+
+
+def first_flags(slot: jax.Array, nzmax: int) -> jax.Array:
+    """Boundary flags of a sorted stream from its output-slot array.
+
+    ``slot >= nzmax`` marks dropped (padding) entries; the first
+    occurrence of every kept slot starts a segment.  The single home of
+    this convention — :attr:`SparsePattern.first` and the kernel-backed
+    sharded fill (``repro.kernels.assembly_ops``) both derive their
+    segment structure here.
+    """
+    valid = slot < nzmax
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), slot[:-1]])
+    return jnp.logical_and(valid, slot != prev)
 
 
 def pattern_from_perm(

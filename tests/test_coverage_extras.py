@@ -82,6 +82,7 @@ def _child_env():
     return env
 
 
+@pytest.mark.slow  # model-level: subprocess serves a tiny model
 def test_serve_launcher_end_to_end():
     env = _child_env()
     out = subprocess.run(
@@ -94,6 +95,7 @@ def test_serve_launcher_end_to_end():
     assert "tok/s" in out.stdout
 
 
+@pytest.mark.slow  # model-level: subprocess trains a tiny model
 def test_train_launcher_preemption_hook():
     """SIGTERM mid-training must checkpoint and exit 0."""
     import signal

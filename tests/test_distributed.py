@@ -81,6 +81,7 @@ print("overflow-ok")
 """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_dp_tp():
     run_py("""
 import numpy as np, jax, jax.numpy as jnp
@@ -123,6 +124,7 @@ print("dp-tp-ok")
 """)
 
 
+@pytest.mark.slow
 def test_sharded_equals_single_device():
     """DP+TP sharded loss == single-device loss (same params/batch)."""
     run_py("""
@@ -153,6 +155,7 @@ print("equal-ok")
 """)
 
 
+@pytest.mark.slow
 def test_moe_dispatch_under_sharding():
     run_py("""
 import numpy as np, jax, jax.numpy as jnp

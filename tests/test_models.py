@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # model-level: the suite's dominant cost
+
 from repro.configs import ARCHS, get_config
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig, SHAPES
 from repro.models.model import (

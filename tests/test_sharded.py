@@ -1,0 +1,208 @@
+"""Sharded two-phase assembly (repro.sparse.sharded) vs the scipy oracle.
+
+Multi-device coverage runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count`` (the device count
+must be fixed before jax initializes; never set globally, per the
+dry-run contract).  All assertions live inside one subprocess so the
+interpreter/jit startup is paid once.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytest.importorskip("scipy.sparse")
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=560,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_pattern_multi_device():
+    """Oracle equality, plan reuse, duplicates across shard boundaries,
+    overflow detection, conversion + find/nnz_of — one 4-device run."""
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+import scipy.sparse as sp
+from repro.core.ransparse import dataset
+from repro.sparse import (
+    convert, find, fsparse, nnz_of, plan_sharded, sparse2,
+    plan_cache_clear, plan_cache_info, ShardedCSC,
+)
+
+assert len(jax.devices()) >= 2
+
+def scipy_csc(rows, cols, vals, M, N):
+    return sp.coo_matrix(
+        (vals.astype(np.float64), (rows, cols)), shape=(M, N)
+    ).tocsc()
+
+rng = np.random.default_rng(7)
+
+# --- Table 4.2 sets: sharded == fsparse bit-for-bit, == scipy oracle ---
+for k in (1, 2, 3):
+    ii, jj, _, siz = dataset(k, seed=42, scale=0.01)
+    rows, cols = (ii - 1).astype(np.int32), (jj - 1).astype(np.int32)
+    M = N = siz
+    pat = plan_sharded(rows, cols, (M, N))
+    assert not bool(pat.any_overflow())
+    # Phase A exclusive-scan invariants: device 0 starts every block's
+    # arrival stream; bases grow with source device and stay within the
+    # block's total load
+    sb = np.asarray(pat.send_base)
+    bl = np.asarray(pat.block_load)
+    assert np.all(sb[0] == 0)
+    assert np.all(np.diff(sb, axis=0) >= 0)
+    assert np.all(sb <= bl)
+    # plan-once / fill-many: two value vectors through ONE plan
+    for _ in range(2):
+        vals = rng.normal(size=rows.shape[0]).astype(np.float32)
+        A = pat.assemble(jnp.asarray(vals))
+        F = fsparse(rows + 1, cols + 1, vals, (M, N))
+        C = convert(A, "csc")
+        nnz = int(F.nnz)
+        assert nnz_of(A) == nnz == scipy_csc(rows, cols, vals, M, N).nnz
+        np.testing.assert_array_equal(np.asarray(C.indptr),
+                                      np.asarray(F.indptr))
+        np.testing.assert_array_equal(np.asarray(C.indices)[:nnz],
+                                      np.asarray(F.indices)[:nnz])
+        # identical (col,row)-sorted duplicate order on both paths ->
+        # identical left-to-right summation -> bit-for-bit data
+        np.testing.assert_array_equal(np.asarray(C.data)[:nnz],
+                                      np.asarray(F.data)[:nnz])
+        ref = scipy_csc(rows, cols, vals, M, N)
+        np.testing.assert_allclose(np.asarray(A.to_dense()), ref.toarray(),
+                                   rtol=2e-5, atol=1e-5)
+print("table42-ok")
+
+# --- duplicates whose copies originate on different source shards ---
+M = N = 16
+base_r = rng.integers(0, M, 64).astype(np.int32)
+base_c = rng.integers(0, N, 64).astype(np.int32)
+rows = np.tile(base_r, 64)   # every device shard holds copies of every pair
+cols = np.tile(base_c, 64)
+vals = rng.normal(size=rows.shape[0]).astype(np.float32)
+pat = plan_sharded(rows, cols, (M, N), capacity_factor=4.0)
+A = pat.assemble(jnp.asarray(vals))
+ref = scipy_csc(rows, cols, vals, M, N)
+np.testing.assert_allclose(np.asarray(A.to_dense()), ref.toarray(),
+                           rtol=1e-4, atol=1e-4)
+assert nnz_of(A) == ref.nnz
+print("dups-ok")
+
+# --- find on a converted sharded result (Matlab order) ---
+C = convert(A, "csc")
+fi, fj, fv = find(C)
+ri, rj = ref.nonzero()  # csc nonzero: column-major, rows ascending
+order = np.lexsort((ri, rj))
+np.testing.assert_array_equal(fi, ri[order] + 1)
+np.testing.assert_array_equal(fj, rj[order] + 1)
+np.testing.assert_allclose(fv, np.asarray(ref[ri[order], rj[order]]).ravel(),
+                           rtol=1e-4, atol=1e-4)
+print("find-ok")
+
+# --- capacity overflow is detected, not silently wrong ---
+L = 4096
+rows = np.zeros(L, np.int32)          # everything lands in row block 0
+cols = (np.arange(L) % N).astype(np.int32)
+pat = plan_sharded(rows, cols, (M, N), capacity_factor=0.1)
+assert bool(pat.any_overflow()), "overflow must be detected"
+# the one-shot facade paths must raise, never return a wrong matrix
+try:
+    fsparse(rows + 1, cols + 1, np.ones(L), (M, N), method="sharded")
+except ValueError as e:
+    assert "overflow" in str(e)
+else:
+    raise AssertionError("facade must raise on routing overflow")
+print("overflow-ok")
+
+# --- odd L (not divisible by p) pads internally ---
+rows = rng.integers(0, M, 1001).astype(np.int32)
+cols = rng.integers(0, N, 1001).astype(np.int32)
+vals = rng.normal(size=1001).astype(np.float32)
+pat = plan_sharded(rows, cols, (M, N))
+A = pat.assemble(jnp.asarray(vals))
+ref = scipy_csc(rows, cols, vals, M, N)
+np.testing.assert_allclose(np.asarray(A.to_dense()), ref.toarray(),
+                           rtol=1e-4, atol=1e-4)
+print("padding-ok")
+
+# --- sparse2 LRU caches ShardedPattern plans too ---
+plan_cache_clear()
+v1 = rng.normal(size=1001)
+v2 = rng.normal(size=1001)
+S1 = sparse2(rows + 1, cols + 1, v1, (M, N), method="sharded")
+assert isinstance(S1, ShardedCSC)
+assert plan_cache_info()["size"] == 1
+S2 = sparse2(rows + 1, cols + 1, v2, (M, N), method="sharded")
+assert plan_cache_info()["size"] == 1   # plan was reused
+np.testing.assert_allclose(
+    np.asarray(S2.to_dense()),
+    scipy_csc(rows, cols, v2.astype(np.float32), M, N).toarray(),
+    rtol=1e-4, atol=1e-4,
+)
+print("sparse2-sharded-ok")
+
+# --- spmv on the mesh-carrying result (shared per-block kernel tail) ---
+x = rng.normal(size=N).astype(np.float32)
+y = np.asarray(A @ jnp.asarray(x))
+np.testing.assert_allclose(y, ref @ x, rtol=1e-3, atol=1e-3)
+print("spmv-ok")
+
+# --- kernel-backed fill (Pallas segment-sum tail) shares the plan ---
+from repro.kernels import fill_sharded_pallas
+K = fill_sharded_pallas(pat, vals)
+np.testing.assert_allclose(np.asarray(K.to_dense()),
+                           np.asarray(A.to_dense()), rtol=1e-4, atol=1e-4)
+print("pallas-fill-ok")
+
+# --- assemble_batch shares the structure ---
+vb = rng.normal(size=(3, 1001)).astype(np.float32)
+Ab = pat.assemble_batch(jnp.asarray(vb))
+assert Ab.data.ndim == 3 and Ab.data.shape[1] == 3
+for b in range(3):
+    refb = scipy_csc(rows, cols, vb[b], M, N)
+    np.testing.assert_allclose(np.asarray(Ab.batch_select(b).to_dense()),
+                               refb.toarray(), rtol=1e-4, atol=1e-4)
+try:
+    Ab.to_dense()
+except ValueError as e:
+    assert "batch_select" in str(e)
+else:
+    raise AssertionError("batched to_dense must point at batch_select")
+print("batch-ok")
+""")
+
+
+def test_sharded_single_device_fallback():
+    """The sharded path degenerates gracefully on a 1-device mesh."""
+    run_py("""
+import numpy as np, jax, jax.numpy as jnp
+import scipy.sparse as sp
+from repro.sparse import convert, fsparse, nnz_of
+
+rng = np.random.default_rng(3)
+M = N = 40
+rows = rng.integers(0, M, 600).astype(np.int32)
+cols = rng.integers(0, N, 600).astype(np.int32)
+vals = rng.normal(size=600).astype(np.float32)
+S = fsparse(rows + 1, cols + 1, vals, (M, N), method="sharded")
+ref = sp.coo_matrix((vals.astype(np.float64), (rows, cols)),
+                    shape=(M, N)).tocsc()
+np.testing.assert_allclose(np.asarray(S.to_dense()), ref.toarray(),
+                           rtol=1e-4, atol=1e-4)
+assert nnz_of(S) == ref.nnz
+assert int(convert(S, "csc").nnz) == ref.nnz
+print("single-ok")
+""", devices=1)

@@ -231,6 +231,103 @@ def test_sparse2_caches_and_reassembles():
                                   np.asarray(S2.indices))
 
 
+def test_convert_to_sharded_roundtrip_single_device():
+    """convert(A, 'sharded') goes through the COO hub, not infinite
+    recursion (regression: no from-hub converter used to exist)."""
+    from repro.launch.mesh import make_data_mesh
+    from repro.sparse import ShardedCSC
+
+    rows, cols, vals = _triplets(29, 400, 20, 24)
+    S = plan(rows, cols, (20, 24)).assemble(jnp.asarray(vals))
+    # pin a 1-device mesh: the default spans ALL devices, and under the
+    # full suite the process sees 512 fake host devices (importing
+    # repro.launch.dryrun — e.g. via tests/test_sharding.py — sets
+    # XLA_FLAGS=--xla_force_host_platform_device_count=512 at import
+    # time), which would compile a 512-way shard_map here
+    Sh = convert(S, "sharded", mesh=make_data_mesh(1))
+    assert isinstance(Sh, ShardedCSC) and format_of(Sh) == "sharded"
+    np.testing.assert_allclose(np.asarray(Sh.to_dense()),
+                               np.asarray(S.to_dense()),
+                               rtol=1e-5, atol=1e-5)
+    back = convert(Sh, "csc")
+    assert int(back.nnz) == int(S.nnz)
+
+
+def test_elementwise_column_vector_values():
+    """Matlab's canonical s-as-column-vector call keeps working."""
+    S = fsparse([1, 2, 3], [1, 2, 3],
+                np.array([[1.0], [2.0], [3.0]]), (3, 3))
+    np.testing.assert_allclose(np.asarray(S.to_dense()),
+                               np.diag([1.0, 2.0, 3.0]))
+
+
+def test_mesh_without_sharded_method_raises():
+    """mesh= must not be silently ignored on single-device methods."""
+    with pytest.raises(ValueError, match="sharded"):
+        fsparse([1], [1], [1.0], (2, 2), mesh=object())
+    with pytest.raises(ValueError, match="sharded"):
+        sparse2([1], [1], [1.0], (2, 2), mesh=object())
+
+
+def test_sparse2_cache_key_distinguishes_dtype_and_shape():
+    """Regression: the plan-cache key must be a structure *identity*.
+
+    ``tobytes()`` alone collides for buffers that alias byte-wise while
+    describing different structures — an int64 vector shares bytes with
+    two int32 indices, and a float32 view shares bytes with an int32
+    array.  A collision silently returns a plan for the wrong structure.
+    """
+    from repro.sparse.matlab import _cache_key
+
+    rows = np.array([1, 2], np.int32)
+    cols32 = np.array([1, 0], np.int32)
+    cols64 = np.array([1], np.int64)
+    assert cols32.tobytes() == cols64.tobytes()
+    # cols dtype/shape byte-aliasing must split the key (the old key
+    # carried neither cols.shape nor any dtype)
+    assert _cache_key(rows, cols32, (3, 3), None, "jnp") != \
+        _cache_key(rows[:1], cols64, (3, 3), None, "jnp")
+    # dtype-only difference (same bytes, same shape) must split it too
+    f32 = rows.view(np.float32)
+    assert rows.tobytes() == f32.tobytes() and rows.shape == f32.shape
+    assert _cache_key(rows, cols32, (3, 3), None, "jnp") != \
+        _cache_key(f32, cols32, (3, 3), None, "jnp")
+
+
+def test_expand_indices_mismatched_vectors_raise():
+    """Matlab-compatible error instead of a silent outer product."""
+    with pytest.raises(ValueError, match="same length"):
+        fsparse([1, 2, 3], [1, 2], 1.0, (3, 3))
+    with pytest.raises(ValueError, match="same length"):
+        fsparse([1, 2], [1, 2], [1.0, 2.0, 3.0], (3, 3))
+
+
+def test_expand_indices_outer_product_value_shapes():
+    ii = np.array([[1], [2]])          # explicit column
+    jj = np.array([1, 2, 3])           # row
+    # scalar fill
+    S = fsparse(ii, jj, 7.0, (2, 3))
+    np.testing.assert_allclose(np.asarray(S.to_dense()), 7 * np.ones((2, 3)))
+    # flat vector of ni*nj values lays out row-major over the grid
+    S = fsparse(ii, jj, np.arange(1.0, 7.0), (2, 3))
+    np.testing.assert_allclose(
+        np.asarray(S.to_dense()), np.arange(1.0, 7.0).reshape(2, 3)
+    )
+    # (ni, 1) and (1, nj) slices broadcast
+    S = fsparse(ii, jj, np.array([[2.0], [3.0]]), (2, 3))
+    np.testing.assert_allclose(
+        np.asarray(S.to_dense()), np.array([[2.0] * 3, [3.0] * 3])
+    )
+    # 1-d scalar-vs-vector stays an outer product (scalars broadcast)
+    S = fsparse([2], [1, 2, 3], 5.0, (2, 3))
+    np.testing.assert_allclose(
+        np.asarray(S.to_dense()), np.array([[0.0] * 3, [5.0] * 3])
+    )
+    # wrong-sized s raises the clean shape error, not a reshape crash
+    with pytest.raises(ValueError, match="cannot expand s"):
+        fsparse(ii, jj, np.arange(1.0, 5.0), (2, 3))
+
+
 # ---------------------------------------------------------------------------
 # Deprecation shims
 # ---------------------------------------------------------------------------

@@ -12,6 +12,8 @@ from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
 from repro.train.sparse_grads import sparse_grad_embed
 from repro.train.train_step import TrainConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # model-level: full train steps
+
 
 def test_adamw_matches_reference_on_quadratic():
     """Minimize ||x - t||^2; compare against a hand-rolled AdamW."""
