@@ -24,6 +24,8 @@ from .common import row
 
 def _bytes(fn, *args):
     cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict] on CPU
+        cost = cost[0] if cost else {}
     return float(cost.get("bytes accessed", float("nan")))
 
 

@@ -3,6 +3,14 @@
 Times each algorithm part separately (as the paper profiles its serial
 and parallel fsparse) and reports each part's share of the total —
 the quantity Figs 4.1/4.2 plot.  ``derived`` carries the fractions.
+
+Beyond the paper figure, a second section times every *registered*
+sort backend (``repro.sparse.dispatch.available_methods()``) on the
+same data sets — the sort (Parts 1-3), the full symbolic plan, and the
+numeric fill — plus the unfused vs fused kernel fills, so the
+radix-vs-counting-sort comparison is reproducible from one command:
+
+  python -m benchmarks.run --only parts [--scale 0.1] [--json out.json]
 """
 from __future__ import annotations
 
@@ -18,8 +26,82 @@ from repro.core.assemble import (
     postprocess,
 )
 from repro.core.ransparse import dataset
+from repro.kernels import fill_fused, fill_pallas
+from repro.sparse import available_methods, plan, sorted_permutation
 
 from .common import row, time_fn
+
+
+def _paper_parts(k, rows_z, cols_z, vals, M, N, L, out):
+    p1 = jax.jit(lambda r: part1_count_rows(r, M))
+    p2 = jax.jit(lambda r: part2_rank(r, M))
+    rank = p2(rows_z)
+    p3 = jax.jit(lambda r, c, rk: part3_unique(r, c, rk, M, N))
+    perm, first, jc_counts, r_s, c_s, valid = p3(rows_z, cols_z, rank)
+    p4 = jax.jit(part4_finalize)
+    jcS, irankP, nnz = p4(first, jc_counts)
+    post = jax.jit(
+        lambda v, rs, ir, f, vl, pm: postprocess(v, rs, ir, f, vl, pm, L, M)
+    )
+
+    t1 = time_fn(p1, rows_z)
+    t2 = time_fn(p2, rows_z)
+    t3 = time_fn(p3, rows_z, cols_z, rank)
+    t4 = time_fn(p4, first, jc_counts)
+    tp = time_fn(post, vals, r_s, irankP, first, valid, perm)
+    total = t1 + t2 + t3 + t4 + tp
+    fr = lambda t: round(t / total, 3)
+    out.append(row(
+        f"parts_set{k}_total", total, L=L,
+        part1=fr(t1), part2=fr(t2), part3=fr(t3), part4=fr(t4),
+        post=fr(tp),
+    ))
+    for nm, t in [("part1", t1), ("part2", t2), ("part3", t3),
+                  ("part4", t4), ("post", tp)]:
+        out.append(row(f"parts_set{k}_{nm}", t, frac=fr(t)))
+
+
+def _methods(k, rows_z, cols_z, vals, M, N, L, out):
+    """Sort / plan / fill timings for every registered backend."""
+    sort_t, plan_t, pats = {}, {}, {}
+    for m in available_methods():
+        sort_fn = jax.jit(
+            lambda r, c, m=m: sorted_permutation(r, c, M=M, N=N, method=m)
+        )
+        plan_fn = jax.jit(
+            lambda r, c, m=m: plan(r, c, (M, N), method=m)
+        )
+        pats[m] = plan_fn(rows_z, cols_z)
+        sort_t[m] = time_fn(sort_fn, rows_z, cols_z)
+        plan_t[m] = time_fn(plan_fn, rows_z, cols_z)
+    base = sort_t["pallas"]  # always registered (builtin backend)
+    for m in sorted(sort_t):
+        out.append(row(
+            f"parts_set{k}_method_{m}", plan_t[m], L=L,
+            sort_us=round(sort_t[m], 1),
+            sort_speedup_vs_pallas=round(base / max(sort_t[m], 1e-9), 2),
+        ))
+    # the O(L) scatter fill is method-agnostic (identical pattern from
+    # every backend by the equivalence contract): time it once
+    fill_fn = jax.jit(lambda p, v: p.assemble(v).data)
+    t_scatter = time_fn(fill_fn, pats[sorted(pats)[0]], vals)
+    out.append(row(f"parts_set{k}_fill_scatter", t_scatter, L=L))
+
+    # numeric-phase kernels: unfused (materialized vals[perm]) vs fused.
+    # all backends produce identical patterns (the equivalence contract),
+    # so any plan from the loop above serves
+    pat = pats["radix"] if "radix" in pats else next(iter(pats.values()))
+    t_unfused = time_fn(
+        jax.jit(lambda p, v: fill_pallas(p, v).data), pat, vals
+    )
+    t_fused = time_fn(
+        jax.jit(lambda p, v: fill_fused(p, v).data), pat, vals
+    )
+    out.append(row(f"parts_set{k}_fill_pallas", t_unfused, speedup=1.0))
+    out.append(row(
+        f"parts_set{k}_fill_fused", t_fused,
+        speedup=round(t_unfused / max(t_fused, 1e-9), 2),
+    ))
 
 
 def run(scale: float = 0.1):
@@ -32,32 +114,8 @@ def run(scale: float = 0.1):
         M = N = siz
         L = len(ii)
 
-        p1 = jax.jit(lambda r: part1_count_rows(r, M))
-        p2 = jax.jit(lambda r: part2_rank(r, M))
-        rank = p2(rows_z)
-        p3 = jax.jit(lambda r, c, rk: part3_unique(r, c, rk, M, N))
-        perm, first, jc_counts, r_s, c_s, valid = p3(rows_z, cols_z, rank)
-        p4 = jax.jit(part4_finalize)
-        jcS, irankP, nnz = p4(first, jc_counts)
-        post = jax.jit(
-            lambda v, rs, ir, f, vl, pm: postprocess(v, rs, ir, f, vl, pm, L, M)
-        )
-
-        t1 = time_fn(p1, rows_z)
-        t2 = time_fn(p2, rows_z)
-        t3 = time_fn(p3, rows_z, cols_z, rank)
-        t4 = time_fn(p4, first, jc_counts)
-        tp = time_fn(post, vals, r_s, irankP, first, valid, perm)
-        total = t1 + t2 + t3 + t4 + tp
-        fr = lambda t: round(t / total, 3)
-        out.append(row(
-            f"parts_set{k}_total", total, L=L,
-            part1=fr(t1), part2=fr(t2), part3=fr(t3), part4=fr(t4),
-            post=fr(tp),
-        ))
-        for nm, t in [("part1", t1), ("part2", t2), ("part3", t3),
-                      ("part4", t4), ("post", tp)]:
-            out.append(row(f"parts_set{k}_{nm}", t, frac=fr(t)))
+        _paper_parts(k, rows_z, cols_z, vals, M, N, L, out)
+        _methods(k, rows_z, cols_z, vals, M, N, L, out)
     return out
 
 

@@ -18,12 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ransparse import dataset
-from repro.sparse import plan
+from repro.sparse import plan, resolve_method
 
 from .common import row, time_fn
 
 
-def run(scale: float = 0.1, method: str = "jnp"):
+def run(scale: float = 0.1, method: str | None = None):
+    method = resolve_method(method)  # None -> the production backend
     rows = []
     for k in (1, 2, 3):
         ii, jj, ss, siz = dataset(k, seed=42, scale=scale)

@@ -28,7 +28,7 @@ import sys
 DEVICES = 8
 
 
-def _inner(scale: float, method: str) -> list[str]:
+def _inner(scale: float, method: str) -> list[dict]:
     import numpy as np
     import jax
     import jax.numpy as jnp
@@ -94,9 +94,27 @@ def run(scale: float = 0.1, method: str = "jnp", devices: int = DEVICES):
         )
     lines = [ln for ln in out.stdout.splitlines()
              if ln.startswith("shard_reassemble")]
+    # re-emit through common.row so the parent's --json collector and
+    # return contract see the subprocess rows as structured records
+    from .common import row
+
+    def _coerce(v: str):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                continue
+        return v
+
+    out_rows = []
     for ln in lines:
-        print(ln)
-    return lines
+        name, us, derived = ln.split(",", 2)
+        kv = dict(
+            (p.split("=", 1)[0], _coerce(p.split("=", 1)[1]))
+            for p in derived.split("|") if "=" in p
+        )
+        out_rows.append(row(name, float(us), **kv))
+    return out_rows
 
 
 if __name__ == "__main__":

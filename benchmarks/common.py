@@ -1,14 +1,20 @@
-"""Benchmark utilities: timing + CSV emission.
+"""Benchmark utilities: timing + CSV emission + JSON collection.
 
 Every bench prints ``name,us_per_call,derived`` rows (the harness
-contract).  ``derived`` carries the paper-analogue quantity (speedup,
-fraction, bytes, ...) as ``key=value|key=value``.
+contract) and returns the same records as dicts; ``derived`` carries
+the paper-analogue quantity (speedup, fraction, bytes, ...) as
+``key=value|key=value`` in the CSV and as plain keys in the dict.
+``benchmarks.run --json`` serializes the collected dicts.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+
+#: every row() call of the current process, in emission order —
+#: drained by ``benchmarks.run --json`` (per-bench slicing done there).
+RESULTS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -36,8 +42,10 @@ def time_host_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us: float, **derived) -> str:
+def row(name: str, us: float, **derived) -> dict:
+    """Emit one CSV row; return (and collect) the machine-readable dict."""
     d = "|".join(f"{k}={v}" for k, v in derived.items())
-    line = f"{name},{us:.1f},{d}"
-    print(line)
-    return line
+    print(f"{name},{us:.1f},{d}")
+    rec = {"name": name, "us_per_call": round(float(us), 1), **derived}
+    RESULTS.append(rec)
+    return rec

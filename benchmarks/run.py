@@ -1,13 +1,18 @@
 """Benchmark harness: one function per paper table/figure.
 
-  python -m benchmarks.run [--scale 0.1]
+  python -m benchmarks.run [--scale 0.1] [--only parts] [--json out.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes every row as a machine-readable record (plus environment
+metadata) so CI and the committed ``BENCH_*.json`` snapshots can diff
+kernel regressions.  Mapping to the paper:
   bench_table42        Table 4.2   overall speedup vs Matlab-oracle
   bench_reassemble     §2.3 payoff: cached SparsePattern vs full assembly
   bench_shard_reassemble  §3 payoff: cached ShardedPattern vs one-shot
                        sharded assembly over a multi-device host mesh
-  bench_parts          Figs 4.1-4.3 per-part load distribution
+  bench_parts          Figs 4.1-4.3 per-part load distribution, plus a
+                       per-backend sort/plan/fill comparison of every
+                       registered ``method=``
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
   bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
@@ -16,7 +21,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
 
 def main() -> None:
@@ -24,6 +31,8 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.1,
                     help="ransparse data-set scale (1.0 = paper's 2.5M)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write collected rows + metadata as JSON")
     args = ap.parse_args()
 
     from . import (
@@ -35,6 +44,7 @@ def main() -> None:
         bench_spmv,
         bench_stream,
         bench_table42,
+        common,
     )
 
     benches = {
@@ -50,15 +60,40 @@ def main() -> None:
         "spmv": lambda: bench_spmv.run(),
     }
     print("name,us_per_call,derived")
+    results: dict[str, list[dict]] = {}
     failed = []
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
+        start = len(common.RESULTS)
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             print(f"{name},-1,error={type(e).__name__}:{e}", file=sys.stderr)
+        results[name] = common.RESULTS[start:]
+
+    if args.json:
+        import jax
+
+        payload = {
+            "meta": {
+                "scale": args.scale,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "jax_version": jax.__version__,
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "failed": [f"{n}: {type(e).__name__}: {e}"
+                           for n, e in failed],
+            },
+            "results": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+
     if failed:
         raise SystemExit(1)
 

@@ -214,11 +214,12 @@ def assemble_fused(
 ) -> CSC:
     """Beyond-paper fast path: one fused-key sort instead of two passes.
 
-    key = col * (M+1) + row fits int32 when (M+1)*(N+1) < 2^31; for
-    larger matrices the dispatch falls back to the two-pass path (int64
-    keys are unavailable without x64 mode).  Halves the number of
-    size-L random-access passes (DESIGN §2.1) at the cost of a wider
-    sort key.
+    key = col * (M+1) + row fits int32 when (M+1)*(N+1) < 2^31; larger
+    matrices widen the key to int64 when x64 mode is enabled, and only
+    otherwise fall back (with a one-time warning) to the two-pass path.
+    Halves the number of size-L random-access passes (DESIGN §2.1) at
+    the cost of a wider sort key; ``method="radix"`` bounds the pass
+    count with no overflow regime at all.
     """
     from ..sparse.pattern import plan
 
@@ -231,7 +232,8 @@ def assemble(coo: COO, *, nzmax: int | None = None,
     """One-shot assembly with backend dispatch.
 
     ``method`` is the single dispatch point (``"jnp" | "fused" |
-    "pallas"`` — see :mod:`repro.sparse.dispatch`); the boolean
+    "pallas" | "radix"`` — see :mod:`repro.sparse.dispatch`; with
+    neither argument the production default applies); the boolean
     ``fused=`` flag is a deprecated alias for ``method="fused"``.
     """
     from .compat import resolve_method_arg

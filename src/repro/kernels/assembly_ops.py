@@ -3,15 +3,19 @@
 Composes the Pallas kernels along the paper's part structure and the
 two-phase API of :mod:`repro.sparse`:
 
-  Part 1   hist.block_offsets      (private per-block counters + accum)
-  Part 2   counting_sort.placement (row pass)
-  Part 3   counting_sort.placement (stable column pass) + boundary flags
-  Part 4   prefix over column counts (tiny, size N)
-  Post     segment_sum.blocked_cumsum + contiguous gathers
+  Parts 1-3  radix_sort.radix_sort_pair  (multi-digit histogram +
+             exclusive scan + placement per 8-11-bit digit — the
+             overflow-free replacement for one counting-sort pass per
+             matrix dimension)
+  Part 4     prefix over column counts (tiny, size N)
+  Numeric    segment_sum.gather_segment_sum_sorted — gather-by-perm +
+             masked sorted-segment-sum fused into one kernel pass
 
 ``plan_pallas`` is the symbolic phase (reusable ``SparsePattern``);
-``assemble_pallas`` is the one-shot plan + kernel-backed numeric fill.
-Tests assert bit-identical structure vs. the NumPy Matlab oracle.
+``fill_fused`` is the fused numeric fill; ``fill_pallas`` keeps the
+unfused two-kernel reduce for comparison; ``assemble_pallas`` is the
+one-shot plan + fused fill.  Tests assert bit-identical structure vs.
+the NumPy Matlab oracle.
 """
 from __future__ import annotations
 
@@ -25,9 +29,13 @@ from jax.sharding import PartitionSpec as P
 from ..core.compat import shard_map
 from ..core.csc import CSC
 from ..sparse.dispatch import sorted_permutation
-from ..sparse.pattern import SparsePattern, first_flags, pattern_from_perm
+from ..sparse.pattern import SparsePattern, fill_dtype, pattern_from_perm
 from ..sparse.sharded import ShardedCSC, ShardedPattern, route_values
-from .segment_sum.ops import segment_sum_sorted
+from .segment_sum.ops import (
+    accum_dtype,
+    gather_segment_sum_sorted,
+    segment_sum_sorted,
+)
 
 
 @functools.partial(
@@ -40,19 +48,55 @@ def plan_pallas(
     M: int,
     N: int,
     nzmax: int | None = None,
-    block_b: int = 1024,
+    block_b: int = 4096,
     interpret: bool | None = None,
 ) -> SparsePattern:
-    """Symbolic phase with both counting-sort passes in Pallas kernels."""
+    """Symbolic phase with the radix-partition planner kernels.
+
+    One histogram + placement pass per 8-11-bit digit of the (col, row)
+    key — ``ceil(log2 M / bits) + ceil(log2 N / bits)`` data-movement
+    passes over L instead of one full pass per matrix dimension, and no
+    int32-overflow regime at any size.
+    """
     L = rows.shape[0]
     nzmax = L if nzmax is None else nzmax
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     perm = sorted_permutation(
-        rows, cols, M=M, N=N, method="pallas",
+        rows, cols, M=M, N=N, method="radix",
         block_b=block_b, interpret=interpret,
     )
     return pattern_from_perm(rows, cols, perm, M=M, N=N, nzmax=nzmax)
+
+
+def fill_fused(
+    pattern: SparsePattern,
+    vals: jax.Array,
+    *,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> CSC:
+    """Fused numeric phase: gather + mask + segment reduce in one kernel.
+
+    ``fill_pallas`` materializes ``vals[perm]`` to HBM and re-reads it
+    inside the cumsum kernel — two extra float round trips over L.
+    Here the gather-by-perm, the padding mask and the prefix sum run in
+    a single Pallas kernel (``gather_masked_cumsum``); only the
+    O(nzmax) segment-boundary gathers remain outside.  Output dtype
+    matches :meth:`SparsePattern.scatter` bit-for-bit (the shared
+    ``fill_dtype`` contract, resolved by the callee).
+    """
+    totals = gather_segment_sum_sorted(
+        vals, pattern.perm, pattern.slot,
+        num_segments=pattern.nzmax, block_b=block_b, interpret=interpret,
+    )
+    return CSC(
+        data=totals,
+        indices=pattern.indices,
+        indptr=pattern.indptr,
+        nnz=pattern.nnz,
+        shape=pattern.shape,
+    )
 
 
 def fill_pallas(
@@ -61,18 +105,24 @@ def fill_pallas(
     *,
     interpret: bool | None = None,
 ) -> CSC:
-    """Numeric phase with the Pallas sorted-segment-sum for the reduce.
+    """Numeric phase with the *unfused* Pallas sorted-segment-sum.
 
     Duplicates are adjacent in the plan's sorted stream, so the paper's
     colliding scatter-add becomes a segment sum — deterministic and
-    parallel ("reduction ... in a fully independent manner").
+    parallel ("reduction ... in a fully independent manner").  Kept as
+    the two-kernel baseline; :func:`fill_fused` removes the
+    ``vals[perm]`` HBM round trip.
     """
     first = pattern.first
     valid = pattern.slot < pattern.nzmax
-    v_s = jnp.where(valid, vals[pattern.perm], 0.0)
+    dtype = fill_dtype(vals)
+    acc = accum_dtype(dtype)  # 16-bit floats cumsum in f32
+    v_s = jnp.where(
+        valid, vals[pattern.perm].astype(acc), jnp.zeros((), acc)
+    )
     totals = segment_sum_sorted(
         v_s, first, num_segments=pattern.nzmax, interpret=interpret
-    )
+    ).astype(dtype)
     return CSC(
         data=totals,
         indices=pattern.indices,
@@ -93,15 +143,12 @@ def _fill_sharded_pallas_jit(send_slot, perm, slot, vals, *, mesh, axis,
     def _local(send_slot, perm, slot, v):
         buf = route_values(send_slot[0], v, p=p, capacity=capacity,
                            axis=axis)
-        sl = slot[0]
-        valid = sl < nzb
-        first = first_flags(sl, nzb)
-        v_s = jnp.where(valid[None, :], buf[:, perm[0]], 0.0)
         data = jax.vmap(
-            lambda vv: segment_sum_sorted(
-                vv, first, num_segments=nzb, interpret=interpret
+            lambda vv: gather_segment_sum_sorted(
+                vv, perm[0], slot[0], num_segments=nzb,
+                interpret=interpret,
             )
-        )(v_s)
+        )(buf)
         return data[None]
 
     return shard_map(
@@ -122,8 +169,9 @@ def fill_sharded_pallas(
 
     Same Phase B replay as ``ShardedPattern.assemble`` (bucket scatter +
     one all_to_all on values), but each row block's reduce runs the
-    Pallas sorted-segment-sum instead of a colliding scatter-add — the
-    distributed fill shares the single-device production kernels.
+    *fused* gather + masked sorted-segment-sum kernel instead of a
+    colliding scatter-add — the distributed fill shares the
+    single-device production kernels.
     """
     vals = pattern._pad_vals(jnp.asarray(vals))
     data = _fill_sharded_pallas_jit(
@@ -145,7 +193,7 @@ def assemble_pallas(
     M: int,
     N: int,
     nzmax: int | None = None,
-    block_b: int = 1024,
+    block_b: int = 4096,
     interpret: bool | None = None,
 ) -> CSC:
     """Padded-CSC assembly with all size-L passes in Pallas kernels."""
@@ -153,4 +201,4 @@ def assemble_pallas(
         rows, cols, M=M, N=N, nzmax=nzmax,
         block_b=block_b, interpret=interpret,
     )
-    return fill_pallas(pattern, vals, interpret=interpret)
+    return fill_fused(pattern, vals, interpret=interpret)

@@ -1,0 +1,16 @@
+"""LSD radix-partition planner — the overflow-free fused-key sort.
+
+Layout mirrors ``counting_sort/``:
+  radix_sort.py  the per-digit Pallas kernels (histogram + placement
+                 with in-VMEM digit extraction)
+  ops.py         digit planning heuristic + the jit'd multi-pass sort
+  ref.py         pure-jnp oracles
+"""
+from .ops import DigitPass, plan_digit_passes, radix_pass_rank, radix_sort_pair
+
+__all__ = [
+    "DigitPass",
+    "plan_digit_passes",
+    "radix_pass_rank",
+    "radix_sort_pair",
+]

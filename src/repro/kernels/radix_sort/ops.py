@@ -1,0 +1,223 @@
+"""Digit planning + the jit'd multi-pass radix sort of (col, row) keys.
+
+The planner treats the pair ``(col, row)`` as one two-word key — hi
+word ``col``, lo word ``row`` — and LSD-sorts it digit by digit:
+row digits first (least significant), col digits last.  Every pass is
+a stable counting sort of one bounded digit (histogram -> exclusive
+scan -> placement, the Part-1/Part-2 kernels of ``radix_sort.py``), so
+the composition is the stable lexicographic (col, row) order — exactly
+the permutation the paper's two counting-sort passes produce, for any
+``M``/``N``, with no fused-key overflow case.
+
+Digit planning (:func:`plan_digit_passes`) picks the pass count from
+``M``, ``N`` and ``L`` with an explicit per-element cost model: a pass
+over a digit whose padded bin tile is ``T`` lanes costs roughly
+
+    PASS_COST                  gather the keys, move the permutation
+  + TILE_COST * T              one-hot histogram + cumsum placement work
+  + LAUNCH_COST / L            fixed kernel/bin-scan cost, amortized
+
+per element, so splitting a word into more, narrower digits wins
+exactly when it shrinks the padded tile (e.g. one 10-bit pass over
+1024 padded bins loses to two 5-bit passes over one 128-lane tile) and
+loses when ``L`` is too small to amortize the extra launches.  The
+most significant digit of each word uses its exact residual bin count
+instead of the full ``2^bits``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..common import LANES, round_up
+from .radix_sort import digit_block_histogram, digit_placement
+
+
+class DigitPass(NamedTuple):
+    """One stable counting-sort pass over ``bits`` bits of one word."""
+
+    src_col: bool   # False: digit of the row word; True: of the col word
+    shift: int      # right shift applied to the word before masking
+    bits: int       # digit width; mask = (1 << bits) - 1
+    nbins: int      # exact bin count (<= 2**bits)
+
+
+#: cost-model constants, in arbitrary "per-element operation" units —
+#: calibrated against bench_parts on the Table 4.2 sets, not measured
+#: per machine.  Only their ratios matter.
+_PASS_COST = 192        # per element, independent of the digit width
+_TILE_COST = 3          # per element per padded bin lane
+_LAUNCH_COST = 50_000   # per pass, amortized over the L elements
+#: VMEM bound on a single digit: 2^11 bins = sixteen 128-lane tiles.
+_MAX_BITS = 11
+
+
+def _word_cost(npass: int, width: int, L: int) -> float:
+    tile = round_up(1 << width, LANES)
+    return npass * (
+        _PASS_COST + _TILE_COST * tile + _LAUNCH_COST / max(L, 1)
+    )
+
+
+def _word_passes(vmax: int, L: int, max_bits: int,
+                 src_col: bool) -> list[DigitPass]:
+    """Cost-optimal equal-width LSD digit split of one index word with
+    values ``0..vmax`` (inclusive — ``vmax`` is the rows' padding
+    sentinel)."""
+    bits_total = max(1, int(vmax).bit_length())
+    # npass = bits_total (width 1) always satisfies any max_bits >= 1,
+    # so the candidate set is never empty
+    _, width = min(
+        (_word_cost(npass, -(-bits_total // npass), L),
+         -(-bits_total // npass))
+        for npass in range(1, bits_total + 1)
+        if -(-bits_total // npass) <= max_bits
+    )
+    passes = []
+    shift = 0
+    while shift < bits_total:
+        bits = min(width, bits_total - shift)
+        top = shift + bits >= bits_total
+        nbins = (vmax >> shift) + 1 if top else 1 << bits
+        passes.append(DigitPass(src_col, shift, bits, nbins))
+        shift += bits
+    return passes
+
+
+def plan_digit_passes(
+    M: int, N: int, L: int, *, max_bits: int | None = None
+) -> tuple[DigitPass, ...]:
+    """LSD pass schedule for the two-word key (col hi, row lo).
+
+    Rows span ``0..M`` (``M`` is the padding sentinel) and cols are
+    sized for ``0..N`` defensively; both stay int32 per word, so there
+    is no combined-key overflow regime at any matrix size.  ``max_bits``
+    caps the digit width (default: 11 — the VMEM bound); the width
+    actually used comes from the cost model above.
+    """
+    if max_bits is None:
+        max_bits = _MAX_BITS
+    if max_bits < 1:
+        raise ValueError(f"max_bits must be >= 1, got {max_bits}")
+    return tuple(
+        _word_passes(M, L, max_bits, src_col=False)
+        + _word_passes(N, L, max_bits, src_col=True)
+    )
+
+
+def radix_pass_positions(
+    keys: jax.Array,
+    *,
+    shift: int,
+    bits: int,
+    nbins: int,
+    block_b: int = 1024,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Landing positions of a stable sort of one digit.
+
+    ``pos[i]`` is where element ``i`` lands when the stream is stably
+    ordered by ``(keys >> shift) & ((1 << bits) - 1)`` — histogram ->
+    exclusive scan -> placement, no rank materialized.  One scatter of
+    any payload through ``pos`` applies the pass (used by
+    :func:`radix_sort_pair` to move the permutation directly).
+    """
+    per_block = digit_block_histogram(
+        keys, shift=shift, bits=bits, nbins=nbins, block_b=block_b,
+        block_t=block_t, interpret=interpret,
+    )[:, :nbins]
+    totals = jnp.sum(per_block, axis=0)
+    jr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals).astype(jnp.int32)]
+    )
+    prior_blocks = jnp.cumsum(per_block, axis=0) - per_block  # exclusive
+    offsets = jr[None, :-1] + prior_blocks.astype(jnp.int32)
+    return digit_placement(
+        keys, offsets, shift=shift, bits=bits, nbins=nbins,
+        block_b=block_b, block_t=block_t, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shift", "bits", "nbins", "block_b", "block_t",
+                     "interpret"),
+)
+def radix_pass_rank(
+    keys: jax.Array,
+    *,
+    shift: int,
+    bits: int,
+    nbins: int,
+    block_b: int = 1024,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stable sort permutation of one digit: ``keys[rank]`` is ordered
+    by ``(keys >> shift) & ((1 << bits) - 1)`` with ties in input order.
+    """
+    pos = radix_pass_positions(
+        keys, shift=shift, bits=bits, nbins=nbins, block_b=block_b,
+        block_t=block_t, interpret=interpret,
+    )
+    L = keys.shape[0]
+    return (
+        jnp.zeros((L,), jnp.int32)
+        .at[pos]
+        .set(jnp.arange(L, dtype=jnp.int32), mode="drop")
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("M", "N", "block_b", "block_t", "max_bits",
+                     "interpret"),
+)
+def radix_sort_pair(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    M: int,
+    N: int,
+    block_b: int = 4096,
+    block_t: int = 512,
+    max_bits: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(col,row)-stable-ordered permutation via LSD radix partitioning.
+
+    Bit-identical to the two-pass counting sort (``method="jnp"`` /
+    ``"pallas"``) for every ``M``/``N``: each digit pass is stable, so
+    the LSD composition is the stable lexicographic order with original
+    input order as the final tie-break.
+
+    Per pass the only size-L data movement is one key gather through
+    the running permutation and one scatter of the permutation through
+    the landing positions (``new_perm[pos[i]] = perm[i]``, i.e.
+    ``perm[rank]`` without ever materializing ``rank``); the first pass
+    reads the keys directly.
+    """
+    L = rows.shape[0]
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    perm = None  # identity until the first pass lands
+    for p in plan_digit_passes(M, N, L, max_bits=max_bits):
+        src = cols if p.src_col else rows
+        keys = src if perm is None else src[perm]
+        pos = radix_pass_positions(
+            keys, shift=p.shift, bits=p.bits, nbins=p.nbins,
+            block_b=block_b, block_t=block_t, interpret=interpret,
+        )
+        payload = jnp.arange(L, dtype=jnp.int32) if perm is None else perm
+        perm = (
+            jnp.zeros((L,), jnp.int32)
+            .at[pos]
+            .set(payload, mode="drop")
+        )
+    if perm is None:  # no passes planned (cannot happen: >= 1 per word)
+        perm = jnp.arange(L, dtype=jnp.int32)
+    return perm

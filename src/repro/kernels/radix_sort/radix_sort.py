@@ -1,0 +1,204 @@
+"""Per-digit kernels of the LSD radix-partition planner.
+
+The counting-sort kernels (``kernels/counting_sort``) run one full
+histogram + placement pass per *matrix dimension* — ``nbins`` is M+1 or
+N+1, so the one-hot tile work grows with the matrix size and huge
+matrices need a fused key that overflows int32.  The radix planner
+instead sorts the two-word key ``(col, row)`` one bounded *digit* at a
+time: every pass looks only at a few bits of one index word, so
+
+  * the padded bin tile is a small constant (usually one 128-lane
+    tile) regardless of M and N — no overflow fallback exists, and
+  * the number of data-movement passes over L is chosen by an explicit
+    cost model (``ops.plan_digit_passes``) instead of being tied to
+    the dimension count.
+
+The kernels here are the per-digit versions of the Part-1/Part-2
+kernels, with the digit extraction ``(key >> shift) & mask`` fused into
+VMEM so the digit stream never round-trips HBM:
+
+  _digit_hist_kernel       private per-block digit histogram
+                           (paper Listing 9, block == thread)
+  _digit_placement_kernel  the paper's placement loop
+                           ``rank[jrS[k]++] = i`` decomposed as
+                           global base (Part-1 offsets) + prior-equal
+                           count, both read off ONE one-hot tile: an
+                           exclusive cumsum down the block axis is the
+                           running per-digit counter, so the whole
+                           placement is O(B x T) VPU work — no
+                           [B, B] equality matrix (the counting-sort
+                           kernel's MXU trick costs O(B^2) per block,
+                           which dominates exactly when the digit's
+                           bin tile is small).
+
+Tiles adapt to the digit width: ``block_t`` shrinks to the 128-lane
+rounding of ``nbins`` so a 5-bit digit pays for one lane tile, not a
+512-wide one.  Padding convention: callers pad the key stream with
+``-1``; the histogram maps negatives to an out-of-range sentinel bin so
+they count nowhere, and placement positions for padding land beyond the
+real stream and are sliced off by ``ops``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import INTERPRET, LANES, round_up
+
+
+#: budget for the [block_b, block_t] one-hot work tile: 2^20 int32
+#: elements = 4 MB, leaving room for the cumsum/product temporaries and
+#: double buffering inside a 16 MB VMEM core.
+_TILE_ELEMS = 1 << 20
+
+
+def _tile_width(nbins: int, block_t: int) -> int:
+    """Lane-tile width for a digit with ``nbins`` bins: never wider than
+    the requested ``block_t``, never narrower than one 128-lane tile."""
+    return min(block_t, round_up(nbins, LANES))
+
+
+def _block_rows(block_b: int, block_t: int) -> int:
+    """Shrink the element block when the bin tile is wide so the
+    [block_b, block_t] one-hot tile stays within the VMEM budget."""
+    return min(block_b, max(1024, _TILE_ELEMS // block_t))
+
+
+def _extract_digit(keys, *, shift: int, mask: int, sentinel: int):
+    """``(keys >> shift) & mask``, with negative (padding) keys routed
+    to the out-of-range ``sentinel`` bin."""
+    d = (keys >> shift) & jnp.int32(mask)
+    return jnp.where(keys < 0, jnp.int32(sentinel), d)
+
+
+def _digit_hist_kernel(keys_ref, out_ref, *, shift: int, mask: int,
+                       block_t: int, sentinel: int):
+    """out[b, t0:t0+T] = histogram of block b's digits over bin tile t."""
+    t = pl.program_id(1)
+    d = _extract_digit(keys_ref[...], shift=shift, mask=mask,
+                       sentinel=sentinel)
+    bins = t * block_t + jax.lax.iota(jnp.int32, block_t)
+    onehot = (d[:, None] == bins[None, :]).astype(jnp.int32)
+    out_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)
+
+
+def _digit_placement_kernel(keys_ref, offsets_ref, pos_ref, *, shift: int,
+                            mask: int, block_t: int, sentinel: int):
+    """Grid (nblocks, ntiles): each tile adds its digits' contribution.
+
+    For element i with digit in this tile:
+      position[i] = offsets[b, digit_i]          (global base + earlier
+                                                  blocks, from Part 1)
+                  + prior_equal_in_block(i)      (exclusive cumsum of
+                                                  the one-hot column)
+    Digits outside the tile contribute zero, so summing over the grid's
+    tile axis assembles the full position — all O(B x T) per tile.
+    """
+    t = pl.program_id(1)
+    d = _extract_digit(keys_ref[...], shift=shift, mask=mask,
+                       sentinel=sentinel)
+    bins = t * block_t + jax.lax.iota(jnp.int32, block_t)
+    onehot = (d[:, None] == bins[None, :]).astype(jnp.int32)
+    prior = jnp.cumsum(onehot, axis=0) - onehot  # exclusive: earlier equals
+    base = offsets_ref[0, :].astype(jnp.int32)
+    contrib = jnp.sum(onehot * (prior + base[None, :]), axis=1)
+
+    @pl.when(t == 0)
+    def _():
+        pos_ref[...] = contrib
+
+    @pl.when(t != 0)
+    def _():
+        pos_ref[...] = pos_ref[...] + contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shift", "bits", "nbins", "block_b", "block_t",
+                     "interpret"),
+)
+def digit_block_histogram(
+    keys: jax.Array,
+    *,
+    shift: int,
+    bits: int,
+    nbins: int,
+    block_b: int = 1024,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-block digit histograms ``[nblocks, nbins_padded]``."""
+    interpret = INTERPRET if interpret is None else interpret
+    L = keys.shape[0]
+    block_t = _tile_width(nbins, block_t)
+    block_b = _block_rows(block_b, block_t)
+    Lp = round_up(max(L, block_b), block_b)
+    Kp = round_up(max(nbins, block_t), block_t)
+    keys_p = jnp.pad(keys, (0, Lp - L), constant_values=-1)
+    nblocks = Lp // block_b
+    return pl.pallas_call(
+        functools.partial(
+            _digit_hist_kernel, shift=shift, mask=(1 << bits) - 1,
+            block_t=block_t, sentinel=Kp,
+        ),
+        grid=(nblocks, Kp // block_t),
+        in_specs=[pl.BlockSpec((block_b,), lambda b, t: (b,))],
+        out_specs=pl.BlockSpec((1, block_t), lambda b, t: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, Kp), jnp.int32),
+        interpret=interpret,
+    )(keys_p)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shift", "bits", "nbins", "block_b", "block_t",
+                     "interpret"),
+)
+def digit_placement(
+    keys: jax.Array,
+    offsets: jax.Array,
+    *,
+    shift: int,
+    bits: int,
+    nbins: int,
+    block_b: int = 1024,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """positions[i] such that a stable digit sort lands element i there.
+
+    ``offsets``: ``[nblocks, nbins]`` per-block exclusive offsets (from
+    ``ops.radix_pass_rank`` with the *same* ``block_b``).  Only the
+    first ``len(keys)`` positions are meaningful; padding placements are
+    sliced off by the caller.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    L = keys.shape[0]
+    block_t = _tile_width(nbins, block_t)
+    block_b = _block_rows(block_b, block_t)  # same clamp as the hist
+    Lp = round_up(max(L, block_b), block_b)
+    Kp = round_up(max(nbins, block_t), block_t)
+    keys_p = jnp.pad(keys, (0, Lp - L), constant_values=-1)
+    nblocks = Lp // block_b
+    offs_p = jnp.pad(
+        offsets.astype(jnp.int32),
+        ((0, nblocks - offsets.shape[0]), (0, Kp - offsets.shape[1])),
+    )
+    pos = pl.pallas_call(
+        functools.partial(
+            _digit_placement_kernel, shift=shift, mask=(1 << bits) - 1,
+            block_t=block_t, sentinel=Kp,
+        ),
+        grid=(nblocks, Kp // block_t),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda b, t: (b,)),
+            pl.BlockSpec((1, block_t), lambda b, t: (b, t)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda b, t: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Lp,), jnp.int32),
+        interpret=interpret,
+    )(keys_p, offs_p)
+    return pos[:L]

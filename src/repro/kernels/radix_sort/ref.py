@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the radix-partition planner."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def digit_rank_ref(keys, *, shift: int, bits: int):
+    """Stable argsort of one extracted digit (padding-free streams)."""
+    d = (keys >> shift) & ((1 << bits) - 1)
+    return jnp.argsort(d, stable=True).astype(jnp.int32)
+
+
+def radix_sort_pair_ref(rows, cols, *, M: int, N: int):
+    """Stable (col, row) lexicographic permutation — the paper's
+    two-pass composition ``rank[rank2]`` (identical to ``_perm_jnp``)."""
+    del M, N
+    rank = jnp.argsort(rows, stable=True).astype(jnp.int32)
+    rank2 = jnp.argsort(cols[rank], stable=True).astype(jnp.int32)
+    return rank[rank2]

@@ -6,7 +6,50 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .segment_sum import blocked_cumsum
+from ...sparse.pattern import fill_dtype, first_flags
+from .segment_sum import blocked_cumsum, gather_masked_cumsum
+
+
+def accum_dtype(dtype) -> jnp.dtype:
+    """Prefix-sum accumulator dtype for a value dtype.
+
+    Segment totals here are differences of a *global* running sum, so
+    accumulator error grows with the stream total, not the segment
+    length — a bf16/f16 cumsum saturates once the running sum passes
+    ~256 and later segments collapse to zero.  16-bit floats therefore
+    accumulate in f32; the O(nzmax) totals are cast back to the value
+    dtype by the caller.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def _segment_totals(c: jax.Array, first: jax.Array, *,
+                    num_segments: int) -> jax.Array:
+    """Per-segment totals from an inclusive prefix sum + boundary flags.
+
+    totals[s] = cumsum[end_s] - cumsum[start_s - 1], with segment start
+    positions recovered by one *collision-free* scatter (each segment
+    has exactly one ``first``).  Shared epilogue of the fused and
+    unfused reduce paths; all traffic is O(num_segments), not O(L).
+    """
+    L = c.shape[0]
+    seg_ids = jnp.cumsum(first.astype(jnp.int32)) - 1
+    starts = (
+        jnp.full((num_segments,), L, jnp.int32)
+        .at[jnp.where(first, seg_ids, num_segments)]
+        .set(jnp.arange(L, dtype=jnp.int32), mode="drop")
+    )
+    # end of segment s = start of segment s+1 - 1 (last segment -> L-1)
+    ends = jnp.concatenate([starts[1:], jnp.array([L], jnp.int32)]) - 1
+    ends = jnp.where(ends >= L, L - 1, ends)
+    zero = jnp.zeros((), c.dtype)  # dtype-preserving mask fill
+    hi = jnp.where(starts < L, c[jnp.clip(ends, 0, L - 1)], zero)
+    lo = jnp.where(starts > 0, c[jnp.clip(starts - 1, 0, L - 1)], zero)
+    lo = jnp.where(starts < L, lo, zero)
+    return hi - lo
 
 
 @functools.partial(
@@ -22,24 +65,64 @@ def segment_sum_sorted(
 ) -> jax.Array:
     """Per-segment totals of a stream whose duplicates are adjacent.
 
-    totals[s] = cumsum[end_s] - cumsum[start_s - 1], with segment start
-    positions recovered by one *collision-free* scatter (each segment
-    has exactly one ``first``).  All HBM traffic is contiguous except
-    two size-``num_segments`` gathers — the access-complexity win the
-    paper's Table 3.1 documents for the permuted-intermediate design.
+    This is the access-complexity win the paper's Table 3.1 documents
+    for the permuted-intermediate design: the reduce is one contiguous
+    cumsum plus two size-``num_segments`` gathers.
     """
-    L = vals.shape[0]
     c = blocked_cumsum(vals, block_b=block_b, interpret=interpret)
-    seg_ids = jnp.cumsum(first.astype(jnp.int32)) - 1
-    starts = (
-        jnp.full((num_segments,), L, jnp.int32)
-        .at[jnp.where(first, seg_ids, num_segments)]
-        .set(jnp.arange(L, dtype=jnp.int32), mode="drop")
-    )
-    # end of segment s = start of segment s+1 - 1 (last segment -> L-1)
-    ends = jnp.concatenate([starts[1:], jnp.array([L], jnp.int32)]) - 1
-    ends = jnp.where(ends >= L, L - 1, ends)
-    hi = jnp.where(starts < L, c[jnp.clip(ends, 0, L - 1)], 0.0)
-    lo = jnp.where(starts > 0, c[jnp.clip(starts - 1, 0, L - 1)], 0.0)
-    lo = jnp.where(starts < L, lo, 0.0)
-    return hi - lo
+    return _segment_totals(c, first, num_segments=num_segments)
+
+
+#: largest value buffer the fused kernel keeps VMEM-resident: 8 MB
+#: (2^21 f32 / 2^20 f64 elements), leaving room for the 64k-wide index
+#: and output blocks on a 16 MB core.  Larger streams take the unfused
+#: (blocked) reduce below instead of failing to fit.
+FUSED_RESIDENT_MAX_BYTES = 8 << 20
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_b", "interpret")
+)
+def gather_segment_sum_sorted(
+    vals: jax.Array,
+    perm: jax.Array,
+    slot: jax.Array,
+    *,
+    num_segments: int,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused numeric phase: segment totals of ``vals[perm]`` masked by
+    ``slot < num_segments``, without materializing the permuted stream.
+
+    ``perm``/``slot`` come straight from a ``SparsePattern`` (or one
+    row block of a ``ShardedPattern``); the gather, the padding mask
+    and the prefix sum run in one Pallas kernel
+    (:func:`~repro.kernels.segment_sum.segment_sum.gather_masked_cumsum`),
+    saving the write+read HBM round trip of ``vals[perm]`` that the
+    unfused ``segment_sum_sorted`` path pays.  Output dtype follows the
+    :func:`repro.sparse.pattern.fill_dtype` contract (inexact dtypes
+    pass through, integers promote once to f32); 16-bit float streams
+    accumulate in f32 (:func:`accum_dtype`) so precision is bounded by
+    the segment totals, not the global running sum.
+    """
+    dtype = fill_dtype(vals)
+    if perm.shape[0] == 0:
+        return jnp.zeros((num_segments,), dtype)
+    vals = vals.astype(accum_dtype(dtype))
+    first = first_flags(slot, num_segments)
+    resident = max(perm.shape[0], vals.shape[0]) * vals.dtype.itemsize
+    if resident > FUSED_RESIDENT_MAX_BYTES:
+        # stream too long to keep vals VMEM-resident: materialize the
+        # gathered stream once and run the blocked carry-scan reduce
+        v_s = jnp.where(
+            slot < num_segments, vals[perm], jnp.zeros((), vals.dtype)
+        )
+        c = blocked_cumsum(v_s, interpret=interpret)
+    else:
+        c = gather_masked_cumsum(
+            vals, perm, slot, num_segments=num_segments, block_b=block_b,
+            interpret=interpret,
+        )
+    return _segment_totals(c, first, num_segments=num_segments) \
+        .astype(dtype)

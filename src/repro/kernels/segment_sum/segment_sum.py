@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import INTERPRET, round_up
+from ..common import INTERPRET, LANES, round_up
 
 
 def _cumsum_kernel(x_ref, out_ref, carry_ref):
@@ -32,6 +32,31 @@ def _cumsum_kernel(x_ref, out_ref, carry_ref):
 
     x = x_ref[...]
     c = jnp.cumsum(x)
+    out_ref[...] = c + carry_ref[0]
+    carry_ref[0] = carry_ref[0] + c[-1]
+
+
+def _gather_cumsum_kernel(perm_ref, slot_ref, vals_ref, out_ref, carry_ref,
+                          *, nzmax: int):
+    """Fused numeric-phase head: gather-by-perm + mask + carry cumsum.
+
+    The unfused path writes ``vals[perm]`` back to HBM and re-reads it
+    in the cumsum kernel — two full float round trips over L.  Here the
+    value vector stays resident (one input block spanning all grid
+    steps) and each grid step gathers its permuted slice directly in
+    VMEM, masks padding (``slot >= nzmax``), and extends the running
+    prefix sum — the gathered stream never exists in HBM.
+    """
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    vals = vals_ref[...]
+    v = vals[perm_ref[...]]
+    v = jnp.where(slot_ref[...] < nzmax, v, jnp.zeros((), v.dtype))
+    c = jnp.cumsum(v)
     out_ref[...] = c + carry_ref[0]
     carry_ref[0] = carry_ref[0] + c[-1]
 
@@ -54,4 +79,55 @@ def blocked_cumsum(
         scratch_shapes=[pltpu.VMEM((1,), x.dtype)],
         interpret=interpret,
     )(xp)
+    return out[:L]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_b", "interpret")
+)
+def gather_masked_cumsum(
+    vals: jax.Array,
+    perm: jax.Array,
+    slot: jax.Array,
+    *,
+    num_segments: int,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``cumsum(where(slot < num_segments, vals[perm], 0))`` in one pass.
+
+    The value vector is kept resident across grid steps (for TPU that
+    means it must fit in VMEM alongside one index/output block —
+    callers cap the resident buffer at ``ops.FUSED_RESIDENT_MAX_BYTES``
+    = 8 MB on a 16 MB core; the Table 4.2 streams fit with
+    room to spare), so the only HBM traffic over L is one read of
+    ``vals``, one read of ``perm``/``slot``, and one write of the
+    prefix sum.
+    The default block is much larger than ``blocked_cumsum``'s because
+    the resident value vector is re-staged per grid step in interpret
+    mode — fewer, bigger steps keep that overhead sublinear; short
+    streams clamp down so they never pad up to a full block.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    L = perm.shape[0]
+    block_b = min(block_b, round_up(max(L, 1), 4096))
+    Lp = round_up(max(L, block_b), block_b)
+    Lv = round_up(max(vals.shape[0], LANES), LANES)
+    vals_p = jnp.pad(vals, (0, Lv - vals.shape[0]))
+    # padding gathers element 0 but is masked by the sentinel slot
+    perm_p = jnp.pad(perm, (0, Lp - L))
+    slot_p = jnp.pad(slot, (0, Lp - L), constant_values=num_segments)
+    out = pl.pallas_call(
+        functools.partial(_gather_cumsum_kernel, nzmax=num_segments),
+        grid=(Lp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((Lv,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Lp,), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), vals.dtype)],
+        interpret=interpret,
+    )(perm_p, slot_p, vals_p)
     return out[:L]

@@ -2,8 +2,9 @@
 
 Symbolic phase (once per sparsity structure):
 
-    >>> pat = plan(rows, cols, (M, N))          # Parts 1-4, the sort
-    >>> pat = plan(rows, cols, (M, N), method="fused")   # or "pallas"
+    >>> pat = plan(rows, cols, (M, N))          # Parts 1-4; backend-aware
+    ...                                         # default (radix on TPU)
+    >>> pat = plan(rows, cols, (M, N), method="radix")   # or "jnp"/"fused"
 
 Numeric phase (many times — no sorting, O(L) gather + scatter):
 
@@ -25,8 +26,10 @@ from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, spmv, spmv_t
 from .dispatch import (
     available_methods,
+    default_method,
     method_from_fused,
     register_method,
+    resolve_method,
     sorted_permutation,
 )
 from .formats import (
@@ -56,7 +59,7 @@ from .sharded import (
 
 
 def assemble(coo: COO, *, nzmax: int | None = None,
-             method: str = "jnp") -> CSC:
+             method: str | None = None) -> CSC:
     """One-shot assembly: ``plan`` + numeric fill in a single call."""
     return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
 
@@ -73,6 +76,7 @@ __all__ = [
     "available_methods",
     "convert",
     "coo_from_matlab",
+    "default_method",
     "find",
     "format_of",
     "fsparse",
@@ -89,6 +93,7 @@ __all__ = [
     "register_converter",
     "register_format",
     "register_method",
+    "resolve_method",
     "sorted_permutation",
     "sparse2",
     "spmv",

@@ -6,21 +6,32 @@ string (replacing the old ``fused=`` boolean threading):
   "jnp"    two stable counting sorts (row pass, then column pass) via
            XLA's stable sort — the paper's Parts 1-3 structure
   "fused"  one stable sort on the fused key ``col * (M+1) + row``
-           (beyond-paper; falls back to "jnp" when the key overflows
-           int32)
-  "pallas" the Pallas counting-sort kernels (MXU placement) — the TPU
-           production path
+           (beyond-paper; widens the key to int64 when x64 mode is
+           enabled, and falls back to "jnp" — with a one-time warning —
+           only when the key overflows int32 *and* int64 is
+           unavailable)
+  "pallas" the Pallas counting-sort kernels (MXU placement) — one full
+           histogram/placement pass per matrix dimension
+  "radix"  the Pallas LSD radix-partition planner
+           (``repro.kernels.radix_sort``): the (col, row) pair is kept
+           as a two-word key and sorted a few bits at a time, so the
+           per-pass bin count is a small constant for any M/N and no
+           overflow fallback exists — the TPU production default
 
-All three produce the *identical* (col,row)-ordered permutation with
-duplicates adjacent and padding (``row == M``) last, so the shared
-Parts-3/4 tail (``pattern_from_perm``) and the numeric phase are
-backend-agnostic.
+All backends produce the *identical* (col,row)-ordered permutation with
+duplicates adjacent and padding (``row == M``) last within its column
+group, so the shared Parts-3/4 tail (``pattern_from_perm``) and the
+numeric phase are backend-agnostic.
 
 New backends register with :func:`register_method`; consumers go
 through :func:`sorted_permutation` and never branch on the name again.
+``method=None`` anywhere resolves to :func:`default_method`, which is
+backend-aware: ``"radix"`` on TPU, ``"fused"`` off-TPU (where the
+Pallas kernels would run in interpret mode and the XLA sort wins).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict
 
 import jax
@@ -29,6 +40,16 @@ import jax.numpy as jnp
 PermFn = Callable[..., jax.Array]
 
 _METHODS: Dict[str, PermFn] = {}
+
+#: the production (TPU) planning backend — what ``method=None``
+#: resolves to on accelerator backends where the Pallas kernels compile
+#: natively.
+DEFAULT_METHOD_TPU = "radix"
+#: the off-TPU default: Pallas runs in interpret mode there, so the
+#: fused-key XLA sort is the fastest correct choice (it widens to int64
+#: under x64 and only warns+falls back to two passes in the
+#: overflow-without-x64 corner).
+DEFAULT_METHOD_INTERPRET = "fused"
 
 
 def register_method(name: str, fn: PermFn) -> None:
@@ -40,11 +61,24 @@ def available_methods() -> tuple[str, ...]:
     return tuple(sorted(_METHODS))
 
 
+def default_method() -> str:
+    """The backend used when callers pass ``method=None`` (backend-aware:
+    ``"radix"`` on TPU, ``"fused"`` where Pallas would interpret)."""
+    return DEFAULT_METHOD_TPU if jax.default_backend() == "tpu" \
+        else DEFAULT_METHOD_INTERPRET
+
+
+def resolve_method(method: str | None) -> str:
+    """Map ``None`` to the production default, pass names through."""
+    return default_method() if method is None else method
+
+
 def sorted_permutation(
     rows: jax.Array, cols: jax.Array, *, M: int, N: int,
-    method: str = "jnp", **kwargs
+    method: str | None = None, **kwargs
 ) -> jax.Array:
     """(col,row)-stable-ordered permutation via the selected backend."""
+    method = resolve_method(method)
     try:
         fn = _METHODS[method]
     except KeyError:
@@ -56,9 +90,16 @@ def sorted_permutation(
 
 
 def method_from_fused(fused: bool | None, method: str | None) -> str:
-    """Back-compat shim: map the deprecated ``fused=`` flag to a method."""
+    """Back-compat shim: map the deprecated ``fused=`` flag to a method.
+
+    An explicit ``fused=True/False`` keeps its historical meaning
+    ("fused"/"jnp"); with neither argument given the modern default
+    backend applies.
+    """
     if method is not None:
         return method
+    if fused is None:
+        return default_method()
     return "fused" if fused else "jnp"
 
 
@@ -74,11 +115,42 @@ def _perm_jnp(rows, cols, *, M: int, N: int) -> jax.Array:
     return rank[rank2]
 
 
+_FUSED_FALLBACK_WARNED = False
+
+
+def _reset_fused_fallback_warning() -> None:
+    """Test hook: re-arm the one-time int32-overflow fallback warning."""
+    global _FUSED_FALLBACK_WARNED
+    _FUSED_FALLBACK_WARNED = False
+
+
 def _perm_fused(rows, cols, *, M: int, N: int) -> jax.Array:
-    """Fused-key single sort; int32-overflow falls back to two passes."""
-    if (M + 1) * (N + 1) >= 2**31:
+    """Fused-key single sort; int64 key above the int32 range.
+
+    Only when the key overflows int32 *and* x64 mode is off does this
+    degrade to the two-pass path — with a one-time warning, because the
+    caller asked for one pass and silently got two.  (``method="radix"``
+    has no such regime at all.)
+    """
+    if (M + 1) * (N + 1) < 2**31:
+        key = cols * jnp.int32(M + 1) + rows
+    elif jax.dtypes.canonicalize_dtype(jnp.int64) == jnp.dtype(jnp.int64):
+        key = cols.astype(jnp.int64) * jnp.int64(M + 1) + \
+            rows.astype(jnp.int64)
+    else:
+        global _FUSED_FALLBACK_WARNED
+        if not _FUSED_FALLBACK_WARNED:
+            _FUSED_FALLBACK_WARNED = True
+            warnings.warn(
+                f"method='fused': key (M+1)*(N+1) = {(M + 1) * (N + 1)} "
+                "overflows int32 and x64 mode is disabled — falling back "
+                "to the two-pass 'jnp' sort. Enable jax_enable_x64 or use "
+                "method='radix' (no overflow regime) to keep a bounded "
+                "pass count.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return _perm_jnp(rows, cols, M=M, N=N)
-    key = cols * jnp.int32(M + 1) + rows
     return jnp.argsort(key, stable=True).astype(jnp.int32)
 
 
@@ -97,6 +169,19 @@ def _perm_pallas(rows, cols, *, M: int, N: int,
     return rank[rank2]
 
 
+def _perm_radix(rows, cols, *, M: int, N: int, block_b: int = 4096,
+                max_bits: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """Pallas LSD radix-partition planner (lazy import, as above)."""
+    from ..kernels.radix_sort.ops import radix_sort_pair
+
+    return radix_sort_pair(
+        rows, cols, M=M, N=N, block_b=block_b, max_bits=max_bits,
+        interpret=interpret,
+    )
+
+
 register_method("jnp", _perm_jnp)
 register_method("fused", _perm_fused)
 register_method("pallas", _perm_pallas)
+register_method("radix", _perm_radix)

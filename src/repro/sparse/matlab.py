@@ -20,6 +20,7 @@ import numpy as np
 
 from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, slot_columns
+from .dispatch import resolve_method
 from .pattern import SparsePattern, plan_coo
 
 
@@ -72,7 +73,7 @@ def expand_indices(ii, jj, ss):
 
 
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str = "jnp", mesh=None):
+            *, method: str | None = None, mesh=None):
     """Assemble a sparse matrix from Matlab-style triplet data.
 
     >>> S = fsparse(i, j, s)             # size implied by max indices
@@ -80,11 +81,14 @@ def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
     >>> S = fsparse(i, j, s, (m, n), nzmax, method="fused")
     >>> S = fsparse(i, j, s, (m, n), method="sharded")   # ShardedCSC
 
-    ``method="sharded"`` runs the distributed path
+    ``method=None`` resolves to the production planning backend
+    (``repro.sparse.dispatch.default_method()`` — ``"radix"`` on TPU,
+    ``"fused"`` off-TPU).  ``method="sharded"`` runs the distributed path
     (:mod:`repro.sparse.sharded`) over ``mesh`` (default: one data axis
     over all devices) and returns a block-row :class:`ShardedCSC`; use
     ``convert(S, "csc")`` for the Matlab layout.
     """
+    method = method if method == "sharded" else resolve_method(method)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     if method == "sharded":
@@ -124,7 +128,7 @@ def _plan_sharded_coo(coo: COO, nzmax, mesh):
 
 
 def fsparse_coo(coo: COO, nzmax: int | None = None,
-                *, method: str = "jnp") -> CSC:
+                *, method: str | None = None) -> CSC:
     """Zero-offset COO entry point (jit-friendly; no host validation)."""
     return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
 
@@ -152,7 +156,7 @@ def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
 
 
 def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str = "jnp", mesh=None):
+            *, method: str | None = None, mesh=None):
     """``fsparse`` with symbolic-plan reuse across calls.
 
     Same contract and results as :func:`fsparse`; repeated calls whose
@@ -165,6 +169,7 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     plans the same way (keyed additionally on the mesh), so repeated
     distributed assembly pays routing + per-block analysis once.
     """
+    method = method if method == "sharded" else resolve_method(method)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     extra = ()

@@ -128,10 +128,7 @@ class SparsePattern:
                 f"vals has length {vals.shape[-1]} but this pattern was "
                 f"planned for L={self.L} triplets"
             )
-        # complex/float dtypes pass through (Matlab sparse is double or
-        # complex); integer vals are promoted once, not silently truncated
-        dtype = vals.dtype if jnp.issubdtype(vals.dtype, jnp.inexact) \
-            else jnp.float32
+        dtype = fill_dtype(vals)
         return (
             jnp.zeros((self.nzmax,), dtype)
             .at[self.slot]
@@ -155,6 +152,20 @@ class SparsePattern:
             .at[self.slot]
             .add(mat[self.perm], mode="drop")
         )
+
+
+def fill_dtype(vals: jax.Array) -> jnp.dtype:
+    """Numeric-phase value dtype contract.
+
+    Complex/float dtypes pass through bit-exact (Matlab sparse is
+    double or complex); integer values are promoted once to f32, not
+    silently truncated.  The single home of this rule —
+    :meth:`SparsePattern.scatter`, the kernel fills
+    (``repro.kernels.assembly_ops`` / ``segment_sum``) and the sharded
+    value routing all resolve through here so the paths cannot drift.
+    """
+    return vals.dtype if jnp.issubdtype(vals.dtype, jnp.inexact) \
+        else jnp.float32
 
 
 def first_flags(slot: jax.Array, nzmax: int) -> jax.Array:
@@ -226,15 +237,18 @@ def plan(
     shape: tuple[int, int],
     *,
     nzmax: int | None = None,
-    method: str = "jnp",
+    method: str | None = None,
 ) -> SparsePattern:
     """Symbolic phase: run the paper's Parts 1-4 once, capture the plan.
 
     ``rows``/``cols`` are zero-offset int arrays of equal length L
     (``row == shape[0]`` marks padding).  ``method`` selects the sort
-    backend (``"jnp" | "fused" | "pallas"`` — see ``repro.sparse.dispatch``).
-    The result is reusable for any number of :meth:`SparsePattern.assemble`
-    calls with different value vectors.
+    backend (``"jnp" | "fused" | "pallas" | "radix"`` — see
+    ``repro.sparse.dispatch``; ``None`` resolves to the backend-aware
+    production default: ``"radix"`` on TPU, ``"fused"`` off-TPU).
+    The result is reusable for any
+    number of :meth:`SparsePattern.assemble` calls with different value
+    vectors.
     """
     M, N = int(shape[0]), int(shape[1])
     L = rows.shape[0]
@@ -246,6 +260,6 @@ def plan(
 
 
 def plan_coo(coo: COO, *, nzmax: int | None = None,
-             method: str = "jnp") -> SparsePattern:
+             method: str | None = None) -> SparsePattern:
     """``plan`` over a :class:`repro.core.COO` container."""
     return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method)

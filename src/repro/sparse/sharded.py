@@ -56,7 +56,8 @@ from ..core.compat import shard_map
 from ..core.coo import COO
 from ..core.csc import CSC, slot_columns
 from ..core.csc import spmv as csc_spmv
-from .pattern import plan
+from .dispatch import resolve_method
+from .pattern import fill_dtype, plan
 
 
 def resolve_mesh(mesh: Mesh | None = None, *, axis: str = "data") -> Mesh:
@@ -386,7 +387,7 @@ def plan_sharded(
     capacity: int | None = None,
     capacity_factor: float = 2.0,
     nzmax: int | None = None,
-    method: str = "jnp",
+    method: str | None = None,
 ) -> ShardedPattern:
     """Run Phases A-C once; capture a reusable :class:`ShardedPattern`.
 
@@ -397,8 +398,12 @@ def plan_sharded(
     ``capacity_factor * L_pad / p**2``, rounded up to a multiple of 8);
     ``nzmax`` is the per-block slot capacity (default: the per-block
     received length ``p * capacity``).  ``method`` selects the *local*
-    sort backend used by each block's Phase C.
+    sort backend used by each block's Phase C (``None`` -> the
+    backend-aware production default; on TPU that is the Pallas radix
+    planner, so the same kernels serve the single-device and per-shard
+    sorts).
     """
+    method = resolve_method(method)
     mesh = resolve_mesh(mesh, axis=axis)
     M, N = int(shape[0]), int(shape[1])
     p = mesh.shape[axis]
@@ -444,8 +449,7 @@ def route_values(send_slot, v, *, p: int, capacity: int, axis: str):
     :func:`repro.kernels.assembly_ops.fill_sharded_pallas`) consumes.
     """
     drop = p * capacity
-    dtype = v.dtype if jnp.issubdtype(v.dtype, jnp.inexact) \
-        else jnp.float32
+    dtype = fill_dtype(v)
     v = v.astype(dtype)
     buf = (
         jnp.zeros((v.shape[0], drop), dtype)

@@ -12,12 +12,19 @@ from repro.kernels import (
     blocked_cumsum,
     counting_sort,
     csc_to_ell,
+    fill_fused,
+    fill_pallas,
+    gather_segment_sum_sorted,
     histogram,
+    plan_digit_passes,
+    radix_sort_pair,
     segment_sum_sorted,
     spmv,
 )
 from repro.kernels.counting_sort.ref import counting_sort_ref
 from repro.kernels.hist.ref import block_histogram_ref, histogram_ref
+from repro.kernels.radix_sort.ops import radix_pass_rank
+from repro.kernels.radix_sort.ref import digit_rank_ref, radix_sort_pair_ref
 from repro.kernels.segment_sum.ref import cumsum_ref, segment_sum_sorted_ref
 from repro.kernels.spmv.ref import spmv_ell_ref
 
@@ -80,6 +87,59 @@ def test_counting_sort_is_stable():
 
 
 # ---------------------------------------------------------------------------
+# radix sort
+# ---------------------------------------------------------------------------
+def test_digit_plan_covers_words_and_bounds_bins():
+    """Digit schedules cover every bit of both words with bounded bins."""
+    for (M, N, L) in [(1, 1, 1), (7, 13, 100), (5000, 5000, 250_000),
+                      (46341, 46341, 4096), (10**9, 10**9, 10**6)]:
+        passes = plan_digit_passes(M, N, L)
+        for vmax, src_col in ((M, False), (N, True)):
+            word = [p for p in passes if p.src_col == src_col]
+            assert sum(p.bits for p in word) == max(1, vmax.bit_length())
+            assert word[0].shift == 0
+            for a, b in zip(word, word[1:]):
+                assert b.shift == a.shift + a.bits  # contiguous digits
+            for p in word:
+                assert p.nbins <= 1 << p.bits <= 2048  # max_bits cap
+
+
+@pytest.mark.parametrize("L,vmax,shift,bits", [
+    (1000, 5000, 0, 7), (1000, 5000, 7, 6), (257, 255, 0, 8),
+])
+def test_radix_pass_rank_vs_ref(L, vmax, shift, bits):
+    rng = np.random.default_rng(L + shift)
+    keys = jnp.asarray(rng.integers(0, vmax + 1, L), jnp.int32)
+    nbins = (vmax >> shift) + 1 if shift + bits >= vmax.bit_length() \
+        else 1 << bits
+    rank = radix_pass_rank(keys, shift=shift, bits=bits, nbins=nbins,
+                           block_b=256)
+    ref = digit_rank_ref(keys, shift=shift, bits=bits)
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(ref))
+
+
+@pytest.mark.parametrize("L,M,N,block_b", [
+    (100, 8, 8, 64), (3000, 700, 900, 512), (17, 3, 3, 8),
+    (2048, 46341, 46341, 256),   # beyond any int32 fused key
+])
+def test_radix_sort_pair_vs_ref(L, M, N, block_b):
+    rng = np.random.default_rng(L + M)
+    rows = jnp.asarray(rng.integers(0, M + 1, L), jnp.int32)  # + sentinel
+    cols = jnp.asarray(rng.integers(0, N, L), jnp.int32)
+    perm = radix_sort_pair(rows, cols, M=M, N=N, block_b=block_b)
+    ref = radix_sort_pair_ref(rows, cols, M=M, N=N)
+    np.testing.assert_array_equal(np.asarray(perm), np.asarray(ref))
+
+
+def test_radix_sort_is_stable():
+    rows = jnp.asarray([2, 1, 2, 1, 2, 0, 0], jnp.int32)
+    cols = jnp.asarray([0, 0, 0, 0, 0, 0, 0], jnp.int32)
+    perm = radix_sort_pair(rows, cols, M=3, N=1, block_b=4)
+    # equal (col,row) keys keep original input order
+    assert np.asarray(perm).tolist() == [5, 6, 1, 3, 0, 2, 4]
+
+
+# ---------------------------------------------------------------------------
 # segment sum / cumsum
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("L,block", [(10, 8), (1000, 128), (4097, 512)])
@@ -129,6 +189,113 @@ def test_assemble_pallas_vs_oracle(L, M, N):
     np.testing.assert_array_equal(np.asarray(S.indptr), jc)
     np.testing.assert_allclose(np.asarray(S.data)[:nnz], pr, rtol=1e-4,
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused gather + masked segment sum (the numeric-phase fast path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,M,N", [(500, 40, 30), (3000, 64, 64)])
+def test_gather_segment_sum_matches_unfused(L, M, N):
+    from repro.sparse import plan
+
+    rng = np.random.default_rng(L)
+    rows = rng.integers(0, M + 1, L).astype(np.int32)  # includes padding
+    cols = rng.integers(0, N, L).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=L), jnp.float32)
+    pat = plan(rows, cols, (M, N))
+    fused = gather_segment_sum_sorted(
+        vals, pat.perm, pat.slot, num_segments=pat.nzmax, block_b=256
+    )
+    valid = pat.slot < pat.nzmax
+    v_s = jnp.where(valid, vals[pat.perm], jnp.zeros((), vals.dtype))
+    unfused = segment_sum_sorted(
+        v_s, pat.first, num_segments=pat.nzmax, block_b=256
+    )
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused),
+                               np.asarray(pat.scatter(vals)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16", "float32",
+                                   "int32"])
+def test_kernel_fills_match_scatter_dtype(dtype):
+    """Regression: kernel fills must resolve value dtypes exactly like
+    ``SparsePattern.scatter`` (inexact pass-through, ints -> f32) —
+    no silent promotion of bf16/f16 streams."""
+    from repro.sparse import plan
+
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, 20, 150).astype(np.int32)
+    cols = rng.integers(0, 20, 150).astype(np.int32)
+    pat = plan(rows, cols, (20, 20))
+    v = jnp.ones(150, jnp.dtype(dtype))
+    ref = pat.scatter(v)
+    for fill in (fill_pallas, fill_fused):
+        got = fill(pat, v).data
+        assert got.dtype == ref.dtype, (fill.__name__, dtype)
+        # all-ones values make the segment sums exact in every dtype
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float64), np.asarray(ref, np.float64),
+            err_msg=f"{fill.__name__}/{dtype}",
+        )
+
+
+def test_kernel_fills_bf16_long_stream_precision():
+    """Regression: segment totals are differences of a *global* running
+    sum, so a bf16 accumulator saturates past ~256 and later segments
+    collapse to zero; 16-bit streams must accumulate in f32."""
+    from repro.sparse import plan
+
+    L, M, N = 5000, 20, 20
+    rng = np.random.default_rng(9)
+    rows = rng.integers(0, M, L).astype(np.int32)
+    cols = rng.integers(0, N, L).astype(np.int32)
+    pat = plan(rows, cols, (M, N))
+    v = jnp.ones(L, jnp.bfloat16)
+    ref = pat.scatter(v)  # per-slot adds: exact small-integer counts
+    for fill in (fill_pallas, fill_fused):
+        got = fill(pat, v).data
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float64), np.asarray(ref, np.float64),
+            err_msg=fill.__name__,
+        )
+
+
+def test_gather_segment_sum_long_stream_fallback(monkeypatch):
+    """Streams too long to keep vals VMEM-resident must take the
+    blocked (unfused) reduce, not fail — same results either way."""
+    from repro.kernels.segment_sum import ops as ss_ops
+    from repro.sparse import plan
+
+    monkeypatch.setattr(ss_ops, "FUSED_RESIDENT_MAX_BYTES", 256)
+    # the threshold is read at trace time: drop cached traces so the
+    # patched value is seen regardless of what ran before
+    ss_ops.gather_segment_sum_sorted.clear_cache()
+    L, M, N = 777, 15, 17
+    rng = np.random.default_rng(L)
+    rows = rng.integers(0, M, L).astype(np.int32)
+    cols = rng.integers(0, N, L).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=L), jnp.float32)
+    pat = plan(rows, cols, (M, N))
+    got = gather_segment_sum_sorted(
+        vals, pat.perm, pat.slot, num_segments=pat.nzmax
+    )
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(pat.scatter(vals)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fill_fused_empty_pattern():
+    from repro.sparse import plan
+
+    pat = plan(np.zeros(0, np.int32), np.zeros(0, np.int32), (4, 4),
+               nzmax=8)
+    out = fill_fused(pat, jnp.zeros((0,), jnp.float32))
+    assert out.data.shape == (8,)
+    assert not np.any(np.asarray(out.data))
 
 
 # ---------------------------------------------------------------------------
