@@ -6,10 +6,15 @@ element values change.  For each Table 4.2 data set this times
 
   full      plan + fill every call   (what ``fsparse`` does)
   reuse     fill only, cached plan   (``SparsePattern.assemble``)
+  grad      jax.grad of fill -> loss (forward fill + the custom-VJP
+            gather-by-slot backward through the cached plan)
 
-both jitted, and reports the reuse speedup — the acceptance criterion
+all jitted, and reports the reuse speedup — the acceptance criterion
 is >= 2x on CPU.  The symbolic phase's sort is the dominant cost, so
-the gap widens with L and on accelerators.
+the gap widens with L and on accelerators.  The ``grad`` row tracks
+the cost of the differentiable-assembly backward (PR 4): its
+``bwd_over_fwd`` derived value is grad-time / fill-time, so a VJP
+regression shows up as a ratio creep even when absolute times move.
 """
 from __future__ import annotations
 
@@ -46,8 +51,13 @@ def run(scale: float = 0.1, method: str | None = None):
         def reuse(p, v):
             return p.assemble(v)
 
+        grad_fill = jax.jit(jax.grad(
+            lambda v, p: jnp.sum(p.assemble(v).data ** 2), argnums=0
+        ))
+
         t_full = time_fn(lambda: full(r_d, c_d, v_d))
         t_reuse = time_fn(lambda: reuse(pat, v_d))
+        t_grad = time_fn(lambda: grad_fill(v_d, pat))
         speedup = t_full / max(t_reuse, 1e-9)
         rows.append(row(
             f"reassemble_set{k}_full", t_full,
@@ -56,6 +66,10 @@ def run(scale: float = 0.1, method: str | None = None):
         rows.append(row(
             f"reassemble_set{k}_reuse", t_reuse,
             speedup=round(speedup, 2),
+        ))
+        rows.append(row(
+            f"reassemble_set{k}_grad", t_grad,
+            bwd_over_fwd=round(t_grad / max(t_reuse, 1e-9), 2),
         ))
     return rows
 

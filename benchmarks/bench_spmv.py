@@ -4,15 +4,18 @@ motivating workload — re-assembly inside time-stepping loops, §1).
 Times one assemble + k SpMV cycle at FEM-like sparsity (7 nnz/row,
 ~12-48 collisions — the paper's 3D Laplace example) and reports the
 assembly : solve ratio, the quantity that decides whether assembly is
-the bottleneck (the paper's premise).
+the bottleneck (the paper's premise).  Runs on the transform-native
+API: ``plan(...)`` + fill for assembly, ``ops.matmul`` for the solve
+leg (one operator surface per registered format, CSC here).
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import assemble_fused, spmv
 from repro.core.ransparse import ransparse
+from repro.sparse import ops, plan
 
 from .common import row, time_fn
 
@@ -22,10 +25,16 @@ def run(siz: int = 20_000, nnz_row: int = 7, nrep: int = 3, k_spmv: int = 10):
     r = jnp.asarray((ii - 1).astype(np.int32))
     c = jnp.asarray((jj - 1).astype(np.int32))
     v = jnp.asarray(ss.astype(np.float32))
-    t_asm = time_fn(lambda: assemble_fused(r, c, v, M=siz, N=siz))
-    A = assemble_fused(r, c, v, M=siz, N=siz)
+
+    @jax.jit
+    def assemble_full(r, c, v):
+        return plan(r, c, (siz, siz), method="fused").assemble(v)
+
+    t_asm = time_fn(lambda: assemble_full(r, c, v))
+    A = assemble_full(r, c, v)
     x = jnp.ones((siz,), jnp.float32)
-    t_spmv = time_fn(lambda: spmv(A, x))
+    matmul = jax.jit(ops.matmul)
+    t_spmv = time_fn(lambda: matmul(A, x))
     return [
         row("fem_assembly", t_asm, L=len(ii), nnz=int(A.nnz)),
         row("fem_spmv", t_spmv,

@@ -1,11 +1,22 @@
 """Benchmark harness: one function per paper table/figure.
 
   python -m benchmarks.run [--scale 0.1] [--only parts] [--json out.json]
+  python -m benchmarks.run --compare BENCH_pr4.json   # regression gate
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
 writes every row as a machine-readable record (plus environment
 metadata) so CI and the committed ``BENCH_*.json`` snapshots can diff
-kernel regressions.  Mapping to the paper:
+kernel regressions.
+
+``--compare BASE.json`` gates the *plan/fill* rows (sort backends,
+kernel fills, cached reassembly, grad-of-fill) against a previous
+``--json`` snapshot: any gated row slower than ``base * (1 +
+--compare-tolerance)`` fails the run (default ±10% — meant for
+same-machine A/B runs; CI compares across machine classes and passes a
+much larger tolerance to only catch complexity-class regressions).
+The baseline must have been recorded at the same ``--scale``.
+
+Mapping to the paper:
   bench_table42        Table 4.2   overall speedup vs Matlab-oracle
   bench_reassemble     §2.3 payoff: cached SparsePattern vs full assembly
   bench_shard_reassemble  §3 payoff: cached ShardedPattern vs one-shot
@@ -22,8 +33,65 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
+
+#: rows the --compare gate covers: per-backend sorts (the symbolic
+#: plan), kernel fills, cached reassembly and the grad-of-fill VJP —
+#: the hot plan/fill paths whose regressions the snapshots exist to
+#: catch.  Oracle/model rows are reported but not gated.
+GATED_ROW_RE = re.compile(r"(_method_|_fill_|_reuse$|_grad$|_post$)")
+
+
+def compare_rows(results: dict, base: dict, *, scale: float,
+                 tolerance: float) -> list[str]:
+    """Regression check of current plan/fill rows vs a snapshot.
+
+    Returns a list of human-readable failures (empty == gate passed);
+    prints a comparison table for every gated row found in both runs.
+    """
+    base_scale = base.get("meta", {}).get("scale")
+    if base_scale is not None and abs(base_scale - scale) > 1e-12:
+        raise SystemExit(
+            f"--compare: baseline was recorded at --scale {base_scale}, "
+            f"this run used --scale {scale}; timings are not comparable"
+        )
+    base_by_name = {
+        r["name"]: r for rows in base.get("results", {}).values()
+        for r in rows
+    }
+    failures: list[str] = []
+    matched = 0
+    print("compare: name,base_us,new_us,ratio,verdict", file=sys.stderr)
+    for rows in results.values():
+        for r in rows:
+            name = r["name"]
+            if not GATED_ROW_RE.search(name) or name not in base_by_name:
+                continue
+            matched += 1
+            b_us = float(base_by_name[name]["us_per_call"])
+            n_us = float(r["us_per_call"])
+            ratio = n_us / max(b_us, 1e-9)
+            verdict = "ok"
+            if ratio > 1.0 + tolerance:
+                verdict = "REGRESSION"
+                failures.append(
+                    f"{name}: {b_us:.1f}us -> {n_us:.1f}us "
+                    f"({ratio:.2f}x > {1.0 + tolerance:.2f}x allowed)"
+                )
+            elif ratio < 1.0 - tolerance:
+                verdict = "improved"
+            print(f"compare: {name},{b_us:.1f},{n_us:.1f},{ratio:.2f},"
+                  f"{verdict}", file=sys.stderr)
+    if matched == 0:
+        # a rename / de-registration must not silently disarm the gate
+        failures.append(
+            "no gated plan/fill row matched between this run and the "
+            "baseline — the gate checked nothing (row names renamed, or "
+            "the baseline lacks the benches this run executed)"
+        )
+    return failures
 
 
 def main() -> None:
@@ -33,6 +101,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write collected rows + metadata as JSON")
+    ap.add_argument("--compare", default=None, metavar="BASE_JSON",
+                    help="gate plan/fill rows against a previous --json "
+                         "snapshot recorded at the same --scale")
+    ap.add_argument("--compare-tolerance", type=float, default=0.10,
+                    help="allowed slowdown fraction before the gate "
+                         "fails (0.10 = ±10%%)")
     args = ap.parse_args()
 
     from . import (
@@ -93,6 +167,19 @@ def main() -> None:
             json.dump(payload, f, indent=1, default=str)
             f.write("\n")
         print(f"wrote {args.json}", file=sys.stderr)
+
+    if args.compare:
+        with open(args.compare) as f:
+            base = json.load(f)
+        regressions = compare_rows(
+            results, base, scale=args.scale,
+            tolerance=args.compare_tolerance,
+        )
+        if regressions:
+            for line in regressions:
+                print(f"compare FAILED: {line}", file=sys.stderr)
+            raise SystemExit(2)
+        print("compare: gate passed", file=sys.stderr)
 
     if failed:
         raise SystemExit(1)

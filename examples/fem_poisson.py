@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.sparse import plan, spmv
+from repro.sparse import ops, plan
 
 
 def p1_triangle_triplets(n: int):
@@ -82,17 +82,18 @@ def main(n: int = 48):
     f[boundary] = 0.0
     b = jnp.asarray(f, jnp.float32)
 
-    # --- CG on the padded-CSC SpMV
+    # --- CG on the unified operator surface (ops.matmul
+    #     dispatches per registered format; CSC here)
     @jax.jit
     def cg(b, iters=400):
         x = jnp.zeros_like(b)
-        r = b - spmv(A, x)
+        r = b - ops.matmul(A, x)
         p = r
         rs = jnp.dot(r, r)
 
         def body(carry, _):
             x, r, p, rs = carry
-            Ap = spmv(A, p)
+            Ap = ops.matmul(A, p)
             alpha = rs / jnp.maximum(jnp.dot(p, Ap), 1e-30)
             x = x + alpha * p
             r = r - alpha * Ap

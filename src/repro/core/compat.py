@@ -38,12 +38,16 @@ def resolve_method_arg(fused: bool | None, method: str | None,
     """Map the deprecated ``fused=`` flag to a ``method`` string, warning.
 
     Shared by every back-compat entry point so the deprecation message
-    and resolution semantics cannot drift apart.
+    and resolution semantics cannot drift apart.  The warning names the
+    *exact* replacement call for the flag value that was passed, so the
+    migration is a copy-paste.
     """
     if fused is not None:
+        resolved = method_from_fused(fused, method)
         warnings.warn(
-            f"{api}(..., fused=...) is deprecated; use method='fused' "
-            "(or 'jnp'/'pallas') — see repro.sparse",
+            f"{api}(..., fused={bool(fused)}) is deprecated; call "
+            f"{api}(..., method='{resolved}') instead — see "
+            "repro.sparse for the full backend table",
             DeprecationWarning,
             stacklevel=stacklevel,
         )

@@ -73,21 +73,60 @@ def slot_columns(indptr: jax.Array, nzmax: int) -> jax.Array:
     return jnp.searchsorted(indptr, slot, side="right").astype(jnp.int32) - 1
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmv_vjp(shape, data, indices, indptr, x):
+    """y = A @ x with an explicit sparse VJP.
+
+    ``∂L/∂x = Aᵀ g`` (== :func:`spmv_t`) and ``∂L/∂data[s] =
+    x[col(s)] · g[row(s)]`` — both O(nzmax) gathers through the stored
+    structure, so no dense intermediate and no XLA transpose-of-scatter
+    appears under ``jax.grad``/``jax.vjp``.
+    """
+    M, N = shape
+    nzmax = data.shape[-1]
+    cols = slot_columns(indptr, nzmax)
+    valid = indices < M
+    xv = jnp.where(valid, x[jnp.clip(cols, 0, N - 1)], 0.0)
+    contrib = data * xv
+    rows = jnp.where(valid, indices, 0)
+    return jnp.zeros((M,), contrib.dtype).at[rows].add(
+        jnp.where(valid, contrib, 0.0)
+    )
+
+
+def _spmv_vjp_fwd(shape, data, indices, indptr, x):
+    return _spmv_vjp(shape, data, indices, indptr, x), \
+        (data, indices, indptr, x)
+
+
+def _spmv_vjp_bwd(shape, res, g):
+    data, indices, indptr, x = res
+    M, N = shape
+    nzmax = data.shape[-1]
+    cols = slot_columns(indptr, nzmax)
+    valid = indices < M
+    colc = jnp.clip(cols, 0, N - 1)
+    gi = jnp.where(valid, g[jnp.where(valid, indices, 0)], 0.0)
+    g_data = jnp.where(valid, x[colc], 0.0) * gi
+    g_x = jax.ops.segment_sum(  # == spmv_t(A, g), inlined
+        data * gi, colc, num_segments=N
+    )
+    return (g_data, None, None, g_x)
+
+
+_spmv_vjp.defvjp(_spmv_vjp_fwd, _spmv_vjp_bwd)
+
+
 @jax.jit
 def spmv(A: CSC, x: jax.Array) -> jax.Array:
     """y = A @ x for padded CSC via gather + segment-scatter-add.
 
     Memory-bound like the paper's assembly; the Pallas version lives in
-    ``repro.kernels.spmv``.
+    ``repro.kernels.spmv``.  Carries the sparse ``custom_vjp``
+    (backward = :func:`spmv_t` for ``x``, a structure gather for
+    ``data``), so it composes inside ``jit``/``grad``/``vmap``.
     """
-    cols = slot_columns(A.indptr, A.nzmax)
-    valid = A.indices < A.M
-    xv = jnp.where(valid, x[jnp.clip(cols, 0, A.N - 1)], 0.0)
-    contrib = A.data * xv
-    rows = jnp.where(valid, A.indices, 0)
-    return jnp.zeros((A.M,), contrib.dtype).at[rows].add(
-        jnp.where(valid, contrib, 0.0)
-    )
+    return _spmv_vjp(A.shape, A.data, A.indices, A.indptr, x)
 
 
 @jax.jit

@@ -22,8 +22,16 @@ from .common import INTERPRET
 from .counting_sort.ops import counting_sort
 from .hist.ops import block_offsets, histogram
 from .radix_sort.ops import plan_digit_passes, radix_sort_pair
-from .segment_sum.ops import gather_segment_sum_sorted, segment_sum_sorted
-from .segment_sum.segment_sum import blocked_cumsum, gather_masked_cumsum
+from .segment_sum.ops import (
+    gather_segment_reduce_sorted,
+    gather_segment_sum_sorted,
+    segment_sum_sorted,
+)
+from .segment_sum.segment_sum import (
+    blocked_cumsum,
+    gather_masked_cumsum,
+    gather_masked_segscan,
+)
 from .spmv.ops import csc_to_ell, spmv
 
 __all__ = [
@@ -37,6 +45,8 @@ __all__ = [
     "fill_pallas",
     "fill_sharded_pallas",
     "gather_masked_cumsum",
+    "gather_masked_segscan",
+    "gather_segment_reduce_sorted",
     "gather_segment_sum_sorted",
     "histogram",
     "plan_digit_passes",

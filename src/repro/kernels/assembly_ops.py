@@ -33,6 +33,7 @@ from ..sparse.pattern import SparsePattern, fill_dtype, pattern_from_perm
 from ..sparse.sharded import ShardedCSC, ShardedPattern, route_values
 from .segment_sum.ops import (
     accum_dtype,
+    gather_segment_reduce_sorted,
     gather_segment_sum_sorted,
     segment_sum_sorted,
 )
@@ -73,21 +74,24 @@ def fill_fused(
     pattern: SparsePattern,
     vals: jax.Array,
     *,
+    accum: str | None = None,
     block_b: int = 65536,
     interpret: bool | None = None,
 ) -> CSC:
     """Fused numeric phase: gather + mask + segment reduce in one kernel.
 
     ``fill_pallas`` materializes ``vals[perm]`` to HBM and re-reads it
-    inside the cumsum kernel — two extra float round trips over L.
-    Here the gather-by-perm, the padding mask and the prefix sum run in
-    a single Pallas kernel (``gather_masked_cumsum``); only the
-    O(nzmax) segment-boundary gathers remain outside.  Output dtype
-    matches :meth:`SparsePattern.scatter` bit-for-bit (the shared
-    ``fill_dtype`` contract, resolved by the callee).
+    inside the scan kernel — two extra float round trips over L.  Here
+    the gather-by-perm, the padding mask and the scan (cumsum for
+    ``sum``/``mean``, segmented min/max scan otherwise) run in a single
+    Pallas kernel; only the O(nzmax) segment-boundary gathers remain
+    outside.  Output dtype matches :meth:`SparsePattern.scatter`
+    bit-for-bit (the shared ``fill_dtype`` contract, resolved by the
+    callee); ``accum=None`` follows the pattern's mode.
     """
-    totals = gather_segment_sum_sorted(
+    totals = gather_segment_reduce_sorted(
         vals, pattern.perm, pattern.slot,
+        accum=pattern.accum if accum is None else accum,
         num_segments=pattern.nzmax, block_b=block_b, interpret=interpret,
     )
     return CSC(
@@ -103,6 +107,7 @@ def fill_pallas(
     pattern: SparsePattern,
     vals: jax.Array,
     *,
+    accum: str | None = None,
     interpret: bool | None = None,
 ) -> CSC:
     """Numeric phase with the *unfused* Pallas sorted-segment-sum.
@@ -111,8 +116,12 @@ def fill_pallas(
     colliding scatter-add becomes a segment sum — deterministic and
     parallel ("reduction ... in a fully independent manner").  Kept as
     the two-kernel baseline; :func:`fill_fused` removes the
-    ``vals[perm]`` HBM round trip.
+    ``vals[perm]`` HBM round trip.  Non-``sum`` accum modes delegate to
+    the shared masked sorted-segment reductions.
     """
+    accum = pattern.accum if accum is None else accum
+    if accum != "sum":
+        return fill_fused(pattern, vals, accum=accum, interpret=interpret)
     first = pattern.first
     valid = pattern.slot < pattern.nzmax
     dtype = fill_dtype(vals)

@@ -1,4 +1,14 @@
-"""Sorted-stream segment sum: Pallas cumsum + contiguous gathers."""
+"""Sorted-stream segment reductions: Pallas scans + contiguous gathers.
+
+``sum`` (and ``mean`` on top of it) uses the invertible-monoid trick —
+one global cumsum, per-segment totals as differences.  ``min``/``max``
+are not invertible, so they run a *segmented* scan instead
+(:func:`~.segment_sum.gather_masked_segscan`) and gather the scan value
+at each segment's last element.  ``first``/``last`` need no scan at
+all: one collision-free scatter of the flagged elements.  All modes
+share the :func:`repro.sparse.pattern.fill_dtype` contract and a jnp
+fallback for streams past the VMEM residency budget.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,8 +16,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ...sparse.pattern import fill_dtype, first_flags
-from .segment_sum import blocked_cumsum, gather_masked_cumsum
+from ...sparse.pattern import (
+    _slot_counts,
+    accum_identity,
+    fill_dtype,
+    first_flags,
+    last_flags,
+    validate_accum,
+)
+from .segment_sum import (
+    blocked_cumsum,
+    gather_masked_cumsum,
+    gather_masked_segscan,
+)
 
 
 def accum_dtype(dtype) -> jnp.dtype:
@@ -126,3 +147,96 @@ def gather_segment_sum_sorted(
         )
     return _segment_totals(c, first, num_segments=num_segments) \
         .astype(dtype)
+
+
+def _segment_ends(slot: jax.Array, *, num_segments: int) -> jax.Array:
+    """Sorted-stream position of each segment's last element (-1: empty)."""
+    L = slot.shape[0]
+    return (
+        jnp.full((num_segments,), -1, jnp.int32)
+        .at[slot]
+        .max(jnp.arange(L, dtype=jnp.int32), mode="drop")
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("accum", "num_segments", "block_b", "interpret"),
+)
+def gather_segment_reduce_sorted(
+    vals: jax.Array,
+    perm: jax.Array,
+    slot: jax.Array,
+    *,
+    accum: str = "sum",
+    num_segments: int,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Masked sorted-segment reduction under any ``accum`` mode.
+
+    The kernel-backed generalization of
+    :func:`gather_segment_sum_sorted`: per-segment ``accum`` of
+    ``vals[perm]`` masked by ``slot < num_segments``, with empty
+    segments (the padded tail) holding structural zeros.  Dispatch:
+
+    ``sum``          the fused gather + cumsum kernel (differences)
+    ``mean``         ``sum`` totals / valid duplicate counts
+    ``min``/``max``  the fused gather + segmented-scan kernel
+                     (:func:`~.segment_sum.gather_masked_segscan`),
+                     reductions gathered at segment ends; exact (order
+                     independent), so bit-identical to the scatter path
+    ``first``/``last``  no scan: one collision-free scatter of the
+                     boundary-flagged elements (already O(num_segments)
+                     writes — a kernel would add nothing)
+
+    Streams whose resident value buffer exceeds
+    :data:`FUSED_RESIDENT_MAX_BYTES` fall back to materializing the
+    gathered stream once and reducing with the jnp segment ops.
+    """
+    validate_accum(accum, vals.dtype)
+    if accum == "sum":
+        return gather_segment_sum_sorted(
+            vals, perm, slot, num_segments=num_segments, block_b=block_b,
+            interpret=interpret,
+        )
+    dtype = fill_dtype(vals)
+    if perm.shape[0] == 0:
+        return jnp.zeros((num_segments,), dtype)
+    if accum == "mean":
+        totals = gather_segment_sum_sorted(
+            vals, perm, slot, num_segments=num_segments, block_b=block_b,
+            interpret=interpret,
+        )
+        n = jnp.maximum(_slot_counts(num_segments, slot), 1).astype(dtype)
+        return totals / n
+    if accum in ("first", "last"):
+        keep = first_flags(slot, num_segments) if accum == "first" \
+            else last_flags(slot, num_segments)
+        return (
+            jnp.zeros((num_segments,), dtype)
+            .at[jnp.where(keep, slot, num_segments)]
+            .set(vals[perm].astype(dtype), mode="drop")
+        )
+    # min / max
+    vals = vals.astype(dtype)
+    first = first_flags(slot, num_segments)
+    ident = accum_identity(accum, dtype)
+    resident = max(perm.shape[0], vals.shape[0]) * vals.dtype.itemsize
+    if resident > FUSED_RESIDENT_MAX_BYTES:
+        v_s = jnp.where(slot < num_segments, vals[perm], ident)
+        seg_ids = jnp.cumsum(first.astype(jnp.int32)) - 1
+        seg_ids = jnp.clip(seg_ids, 0, num_segments - 1)
+        reduce = jax.ops.segment_min if accum == "min" \
+            else jax.ops.segment_max
+        red = reduce(v_s, seg_ids, num_segments=num_segments)
+        occupied = _slot_counts(num_segments, slot) > 0
+    else:
+        scan = gather_masked_segscan(
+            vals, perm, slot, first, num_segments=num_segments, op=accum,
+            block_b=block_b, interpret=interpret,
+        )
+        ends = _segment_ends(slot, num_segments=num_segments)
+        red = scan[jnp.clip(ends, 0, scan.shape[0] - 1)]
+        occupied = ends >= 0  # O(nzmax); no extra count pass over L
+    return jnp.where(occupied, red, jnp.zeros((), dtype))

@@ -18,3 +18,45 @@ def segment_sum_sorted_ref(vals, first, *, num_segments: int):
     return jax.ops.segment_sum(
         vals, seg_ids, num_segments=num_segments, indices_are_sorted=True
     )
+
+
+@functools.partial(jax.jit, static_argnames=("accum", "num_segments"))
+def segment_reduce_sorted_ref(vals, perm, slot, *, accum: str,
+                              num_segments: int):
+    """jnp oracle for the masked sorted-segment ``accum`` reductions.
+
+    Mirrors ``ops.gather_segment_reduce_sorted`` (same masking and
+    empty-segment-zero contract) using only ``jax.ops.segment_*``.
+    """
+    from ...sparse.pattern import (
+        accum_identity, first_flags, last_flags,
+    )
+
+    v = vals[perm]
+    valid = slot < num_segments
+    ids = jnp.where(valid, slot, 0)
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32), ids, num_segments=num_segments
+    )
+    occupied = counts > 0
+    if accum in ("sum", "mean"):
+        s = jax.ops.segment_sum(
+            jnp.where(valid, v, 0), ids, num_segments=num_segments
+        )
+        if accum == "sum":
+            return s
+        return s / jnp.maximum(counts, 1).astype(v.dtype)
+    if accum in ("min", "max"):
+        ident = accum_identity(accum, v.dtype)
+        reduce = jax.ops.segment_min if accum == "min" \
+            else jax.ops.segment_max
+        red = reduce(jnp.where(valid, v, ident), ids,
+                     num_segments=num_segments)
+        return jnp.where(occupied, red, jnp.zeros((), v.dtype))
+    keep = first_flags(slot, num_segments) if accum == "first" \
+        else last_flags(slot, num_segments)
+    return (
+        jnp.zeros((num_segments,), v.dtype)
+        .at[jnp.where(keep, slot, num_segments)]
+        .set(v, mode="drop")
+    )

@@ -82,6 +82,103 @@ def blocked_cumsum(
     return out[:L]
 
 
+def _gather_segscan_kernel(perm_ref, slot_ref, first_ref, vals_ref,
+                           out_ref, carry_ref, *, nzmax: int, op: str):
+    """Fused gather + mask + *segmented* scan (min/max) with carry.
+
+    The cumsum trick of :func:`_gather_cumsum_kernel` extracts segment
+    totals as differences of a global running sum — that only works for
+    an invertible monoid.  min/max are not invertible, so the reduction
+    is an inclusive **segmented** scan instead: a (value, started) pair
+    combined with ``combine((a, fa), (b, fb)) = (b if fb else op(a, b),
+    fa | fb)`` — associative, so the within-block scan is a
+    Hillis-Steele ladder (log2(block) shift+select steps, all in VMEM)
+    and the cross-block carry is just the last full-prefix value (its
+    flag can never be consumed: the carry is the leftmost operand).
+    Masked (``slot >= nzmax``) elements carry the op identity, so
+    padding between segments passes the running value through; the
+    per-segment reduction is then the scan value at each segment's last
+    element (gathered by the caller).
+    """
+    b = pl.program_id(0)
+    vals = vals_ref[...]
+    ident = jnp.array(
+        jnp.inf if op == "min" else -jnp.inf, vals.dtype
+    )
+    fn = jnp.minimum if op == "min" else jnp.maximum
+
+    @pl.when(b == 0)
+    def _():
+        carry_ref[...] = jnp.full_like(carry_ref, ident)
+
+    v = vals[perm_ref[...]]
+    v = jnp.where(slot_ref[...] < nzmax, v, ident)
+    f = first_ref[...] != 0
+    n = v.shape[0]
+    d = 1
+    while d < n:  # static unroll: log2(block_b) shift+select steps
+        pv = jnp.concatenate([jnp.full((d,), ident, v.dtype), v[:-d]])
+        pf = jnp.concatenate([jnp.zeros((d,), jnp.bool_), f[:-d]])
+        v = jnp.where(f, v, fn(pv, v))
+        f = jnp.logical_or(f, pf)
+        d *= 2
+    out = jnp.where(f, v, fn(carry_ref[0], v))
+    out_ref[...] = out
+    carry_ref[0] = out[-1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "op", "block_b", "interpret")
+)
+def gather_masked_segscan(
+    vals: jax.Array,
+    perm: jax.Array,
+    slot: jax.Array,
+    first: jax.Array,
+    *,
+    num_segments: int,
+    op: str,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Inclusive segmented min/max scan of ``vals[perm]`` masked by
+    ``slot < num_segments``, segments delimited by ``first`` flags.
+
+    Same residency contract as :func:`gather_masked_cumsum`: the value
+    vector stays VMEM-resident across grid steps, so the only HBM
+    traffic over L is one read of ``vals``/``perm``/``slot``/``first``
+    and one write of the scan.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    L = perm.shape[0]
+    block_b = min(block_b, round_up(max(L, 1), 4096))
+    Lp = round_up(max(L, block_b), block_b)
+    Lv = round_up(max(vals.shape[0], LANES), LANES)
+    vals_p = jnp.pad(vals, (0, Lv - vals.shape[0]))
+    # padding gathers element 0 but is masked to the identity by the
+    # sentinel slot; padded first-flags are 0, so the carry flows through
+    perm_p = jnp.pad(perm, (0, Lp - L))
+    slot_p = jnp.pad(slot, (0, Lp - L), constant_values=num_segments)
+    first_p = jnp.pad(first.astype(jnp.int32), (0, Lp - L))
+    out = pl.pallas_call(
+        functools.partial(
+            _gather_segscan_kernel, nzmax=num_segments, op=op
+        ),
+        grid=(Lp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((Lv,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Lp,), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), vals.dtype)],
+        interpret=interpret,
+    )(perm_p, slot_p, first_p, vals_p)
+    return out[:L]
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_segments", "block_b", "interpret")
 )

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..sparse.ops import scatter_rows
 from .layers import _dense_init
 
 
@@ -111,14 +112,13 @@ def moe_ffn(params, x, cfg):
     token_of = jnp.repeat(jnp.arange(TG, dtype=jnp.int32), K)
 
     def bucketize(slot_g, x_g):
-        # one gather + ONE scatter.  (§Perf iteration 6 tried K
-        # per-choice scatters to skip the [TG*K, D] gathered copy —
-        # REFUTED: every functional scatter costs a full buffer
-        # read-modify-write in the HLO cost model, 16 buffer passes vs
-        # ~4.5.  Fewer, larger scatters win.)
-        return jnp.zeros((E * C, D), x.dtype).at[slot_g].set(
-            x_g[token_of], mode="drop"
-        )
+        # one gather + ONE scatter, via the differentiable sparse-API
+        # primitive (backward = masked gather by slot, the paper's irank
+        # replay).  (§Perf iteration 6 tried K per-choice scatters to
+        # skip the [TG*K, D] gathered copy — REFUTED: every functional
+        # scatter costs a full buffer read-modify-write in the HLO cost
+        # model, 16 buffer passes vs ~4.5.  Fewer, larger scatters win.)
+        return scatter_rows(slot_g, x_g[token_of], num_slots=E * C)
 
     xs = jax.vmap(bucketize)(slot, xt).reshape(G, E, C, D)
 
@@ -187,9 +187,7 @@ def moe_ffn_shardmap(params, x, cfg, mesh, dp_axes):
         slot, load = moe_dispatch_indices(
             experts.reshape(-1).astype(jnp.int32), n_experts=E, capacity=C
         )
-        buf = jnp.zeros((E * C, D), x_blk.dtype).at[slot].set(
-            xf[token_of], mode="drop"
-        )
+        buf = scatter_rows(slot, xf[token_of], num_slots=E * C)
         return (buf.reshape(1, E, C, D), slot[None], gate_vals[None],
                 load[None], jnp.sum(probs, axis=0)[None])
 

@@ -1,19 +1,31 @@
 """repro.sparse — the two-phase sparse assembly API.
 
-Symbolic phase (once per sparsity structure):
+Symbolic phase (once per sparsity structure) and numeric phase (many
+times — no sorting, O(L) gather + scatter-reduce):
 
-    >>> pat = plan(rows, cols, (M, N))          # Parts 1-4; backend-aware
+    >>> import numpy as np
+    >>> rows = np.array([0, 1, 1, 0]); cols = np.array([0, 0, 1, 0])
+    >>> pat = plan(rows, cols, (2, 2))          # Parts 1-4; backend-aware
     ...                                         # default (radix on TPU)
-    >>> pat = plan(rows, cols, (M, N), method="radix")   # or "jnp"/"fused"
-
-Numeric phase (many times — no sorting, O(L) gather + scatter):
-
-    >>> A  = pat.assemble(vals)                 # padded CSC
-    >>> As = pat.assemble_batch(vals_batch)     # [B, nzmax] data
+    >>> A = pat.assemble(np.ones(4, np.float32))     # padded CSC
+    >>> int(A.nnz)                                   # (0,0) dups summed
+    3
+    >>> As = pat.assemble_batch(np.ones((5, 4), np.float32))
+    >>> As.data.shape                                # [B, nzmax] data
+    (5, 4)
 
 The same split at mesh scale (``plan_sharded`` -> ``ShardedPattern``
 -> block-row ``ShardedCSC``) lives in :mod:`repro.sparse.sharded` and
 is reachable as ``method="sharded"`` from the facade.
+
+The API is **transform-native**: ``assemble``/``assemble_batch``/
+``scatter``/``reduce_rows`` carry a ``custom_vjp`` whose backward is
+the O(L) gather-by-slot through the stored plan, duplicates can
+combine under any ``accum`` mode (``"sum"|"min"|"max"|"mean"|"first"|
+"last"``), and :mod:`repro.sparse.ops` exposes one operator surface
+(``matmul``/``transpose``/``add``/``scale``/``diagonal``/``to_dense``)
+dispatched per registered format — so sparse matrices compose inside
+``jax.jit`` / ``jax.grad`` / ``jax.vmap``.
 
 One-shot convenience (plan + fill), format conversions, and the
 Matlab-compat facade (``fsparse``/``sparse2``/``find``/``nnz_of``)
@@ -49,7 +61,14 @@ from .matlab import (
     plan_cache_info,
     sparse2,
 )
-from .pattern import SparsePattern, pattern_from_perm, plan, plan_coo
+from .pattern import (
+    ACCUM_MODES,
+    SparsePattern,
+    pattern_from_perm,
+    plan,
+    plan_coo,
+)
+from . import ops
 from .sharded import (
     ShardedCSC,
     ShardedPattern,
@@ -65,6 +84,7 @@ def assemble(coo: COO, *, nzmax: int | None = None,
 
 
 __all__ = [
+    "ACCUM_MODES",
     "COO",
     "CSC",
     "CSR",
@@ -83,6 +103,7 @@ __all__ = [
     "fsparse_coo",
     "method_from_fused",
     "nnz_of",
+    "ops",
     "pattern_from_perm",
     "plan",
     "plan_cache_clear",

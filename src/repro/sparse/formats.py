@@ -176,6 +176,52 @@ def coo_to_csr(A: COO, *, nzmax: int | None = None,
                nnz=t.nnz, shape=(M, N))
 
 
+def _resort_compressed(A, *, bins: int, other: int):
+    """Shared body of the direct CSC<->CSR converters.
+
+    The stored stream of a compressed format is lexicographic in
+    (compressed axis, stored index), so ONE *stable* sort by the stored
+    index leaves equal-key runs ordered by the old compressed axis —
+    exactly the other format's order; the new pointer is one bincount.
+    ``bins`` is the output's compressed-axis length (== the input's
+    stored-index sentinel, which sorts last on its own), ``other`` the
+    output's stored-index sentinel.  Returns (data, indices, indptr).
+    """
+    src = slot_columns(A.indptr, A.nzmax)  # input's compressed axis
+    valid = A.indices < bins
+    order = jnp.argsort(A.indices, stable=True)  # sentinels sink last
+    counts = jnp.bincount(
+        jnp.where(valid, A.indices, bins), length=bins + 1
+    )[:bins].astype(jnp.int32)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    data = jnp.where(valid, A.data, 0.0)[order]
+    indices = jnp.where(
+        valid, jnp.clip(src, 0, other - 1), other
+    )[order].astype(jnp.int32)
+    return data, indices, indptr
+
+
+def csc_to_csr(A: CSC) -> CSR:
+    """Direct CSC -> CSR: ONE stable sort by row, no COO round trip.
+
+    The COO-hub route re-plans from scratch (a full (row, col) sort
+    plus dedup over transposed triplets); here the structure is already
+    deduplicated, so :func:`_resort_compressed` suffices.
+    """
+    data, indices, indptr = _resort_compressed(A, bins=A.M, other=A.N)
+    return CSR(data=data, indices=indices, indptr=indptr, nnz=A.nnz,
+               shape=A.shape)
+
+
+def csr_to_csc(A: CSR) -> CSC:
+    """Direct CSR -> CSC: the mirror single stable sort by column."""
+    data, indices, indptr = _resort_compressed(A, bins=A.N, other=A.M)
+    return CSC(data=data, indices=indices, indptr=indptr, nnz=A.nnz,
+               shape=A.shape)
+
+
 register_format("coo", COO)
 register_format("csc", CSC)
 register_format("csr", CSR)
@@ -183,3 +229,5 @@ register_converter(CSC, "coo", csc_to_coo)
 register_converter(CSR, "coo", csr_to_coo)
 register_converter(COO, "csc", coo_to_csc)
 register_converter(COO, "csr", coo_to_csr)
+register_converter(CSC, "csr", csc_to_csr)
+register_converter(CSR, "csc", csr_to_csc)

@@ -21,7 +21,7 @@ import numpy as np
 from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, slot_columns
 from .dispatch import resolve_method
-from .pattern import SparsePattern, plan_coo
+from .pattern import SparsePattern, plan_coo, validate_accum
 
 
 def expand_indices(ii, jj, ss):
@@ -73,29 +73,46 @@ def expand_indices(ii, jj, ss):
 
 
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str | None = None, mesh=None):
+            *, method: str | None = None, mesh=None, accum: str = "sum"):
     """Assemble a sparse matrix from Matlab-style triplet data.
 
+    >>> import numpy as np
+    >>> i, j, s = [3, 2, 3], [1, 2, 1], [7.0, 9.0, 1.0]
     >>> S = fsparse(i, j, s)             # size implied by max indices
-    >>> S = fsparse(i, j, s, (m, n))     # explicit size
-    >>> S = fsparse(i, j, s, (m, n), nzmax, method="fused")
-    >>> S = fsparse(i, j, s, (m, n), method="sharded")   # ShardedCSC
+    >>> S.shape, int(S.nnz)              # duplicates at (3, 1) summed
+    ((3, 2), 2)
+    >>> np.asarray(S.to_dense())
+    array([[0., 0.],
+           [0., 9.],
+           [8., 0.]], dtype=float32)
+
+    Other call shapes (explicit size, capacity, backend, distribution)::
+
+        S = fsparse(i, j, s, (m, n))     # explicit size
+        S = fsparse(i, j, s, (m, n), nzmax, method="fused")
+        S = fsparse(i, j, s, (m, n), method="sharded")   # ShardedCSC
+        S = fsparse(i, j, s, (m, n), accum="max")        # accumarray-style
 
     ``method=None`` resolves to the production planning backend
     (``repro.sparse.dispatch.default_method()`` — ``"radix"`` on TPU,
     ``"fused"`` off-TPU).  ``method="sharded"`` runs the distributed path
     (:mod:`repro.sparse.sharded`) over ``mesh`` (default: one data axis
     over all devices) and returns a block-row :class:`ShardedCSC`; use
-    ``convert(S, "csc")`` for the Matlab layout.
+    ``convert(S, "csc")`` for the Matlab layout.  ``accum`` selects how
+    duplicate (i, j) values combine (``repro.sparse.ACCUM_MODES`` —
+    Matlab's ``sparse`` sums; the rest are ``accumarray`` reductions).
     """
     method = method if method == "sharded" else resolve_method(method)
+    validate_accum(accum)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     if method == "sharded":
+        _reject_sharded_accum(accum)
         pat = _plan_sharded_coo(coo, nzmax, mesh)
         return pat.assemble(coo.vals)
     _reject_unused_mesh(mesh, method)
-    return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+    return plan_coo(coo, nzmax=nzmax, method=method,
+                    accum=accum).assemble(coo.vals)
 
 
 def _reject_unused_mesh(mesh, method):
@@ -103,6 +120,15 @@ def _reject_unused_mesh(mesh, method):
         raise ValueError(
             f"mesh= is only meaningful with method='sharded' "
             f"(got method={method!r}); the mesh would be silently ignored"
+        )
+
+
+def _reject_sharded_accum(accum):
+    if accum != "sum":
+        raise ValueError(
+            f"accum={accum!r} is not supported with method='sharded' "
+            "(the distributed fill reduces with scatter-add); assemble "
+            "per-shard with plan(..., accum=...) or drop method='sharded'"
         )
 
 
@@ -128,9 +154,10 @@ def _plan_sharded_coo(coo: COO, nzmax, mesh):
 
 
 def fsparse_coo(coo: COO, nzmax: int | None = None,
-                *, method: str | None = None) -> CSC:
+                *, method: str | None = None, accum: str = "sum") -> CSC:
     """Zero-offset COO entry point (jit-friendly; no host validation)."""
-    return plan_coo(coo, nzmax=nzmax, method=method).assemble(coo.vals)
+    return plan_coo(coo, nzmax=nzmax, method=method,
+                    accum=accum).assemble(coo.vals)
 
 
 # ---------------------------------------------------------------------------
@@ -156,13 +183,13 @@ def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
 
 
 def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str | None = None, mesh=None):
+            *, method: str | None = None, mesh=None, accum: str = "sum"):
     """``fsparse`` with symbolic-plan reuse across calls.
 
     Same contract and results as :func:`fsparse`; repeated calls whose
-    index vectors (and shape/nzmax/method) are identical hit a small
-    host-side LRU of :class:`SparsePattern` plans and run only the
-    O(L) numeric phase.  This is the repeated-assembly FEM workflow
+    index vectors (and shape/nzmax/method/accum) are identical hit a
+    small host-side LRU of :class:`SparsePattern` plans and run only
+    the O(L) numeric phase.  This is the repeated-assembly FEM workflow
     (fixed mesh, changing element values) as a drop-in call.
 
     ``method="sharded"`` caches :class:`~repro.sparse.sharded.ShardedPattern`
@@ -170,24 +197,28 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     distributed assembly pays routing + per-block analysis once.
     """
     method = method if method == "sharded" else resolve_method(method)
+    validate_accum(accum)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     extra = ()
     if method == "sharded":
         from .sharded import mesh_fingerprint, resolve_mesh
 
+        _reject_sharded_accum(accum)
         mesh = resolve_mesh(mesh)
         extra = mesh_fingerprint(mesh, "data")
     else:
         _reject_unused_mesh(mesh, method)
+    # accum is part of the plan (a static SparsePattern field), so it is
+    # part of the cache identity too
     key = _cache_key(np.asarray(coo.rows), np.asarray(coo.cols),
-                     coo.shape, nzmax, method, extra)
+                     coo.shape, nzmax, method, (accum,) + tuple(extra))
     pat = _PLAN_CACHE.get(key)
     if pat is None:
         if method == "sharded":
             pat = _plan_sharded_coo(coo, nzmax, mesh)
         else:
-            pat = plan_coo(coo, nzmax=nzmax, method=method)
+            pat = plan_coo(coo, nzmax=nzmax, method=method, accum=accum)
         _PLAN_CACHE[key] = pat
         while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
             _PLAN_CACHE.popitem(last=False)

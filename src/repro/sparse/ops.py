@@ -1,0 +1,307 @@
+"""repro.sparse.ops — one operator surface for every registered format.
+
+Before this module each format grew its own ad-hoc methods (``CSC``
+spmv in ``repro.core.csc``, a second spmv in ``repro.kernels.spmv``,
+``ShardedCSC.spmv``, per-format ``to_dense``).  Here the operators are
+dispatched *per registered format* through the same registry that
+:func:`repro.sparse.convert` uses, so a consumer writes
+``ops.matmul(A, x)`` for any ``A`` and new formats join by calling
+:func:`register_op` — no format branching at call sites.
+
+Every operator composes inside ``jit``/``grad``/``vmap``: ``matmul``
+on CSC carries the sparse ``custom_vjp`` (``spmv`` VJP = ``spmv_t``),
+assembly reaches here through the differentiable
+:meth:`~repro.sparse.pattern.SparsePattern.assemble`, and the remaining
+operators are built from gathers/segment-sums whose transposes are
+already sparse.
+
+    >>> import numpy as np
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.sparse import fsparse, plan, ops
+
+    ``fsparse`` gives a padded CSC; the operators work on it directly
+    (duplicates at (1, 1) were summed at assembly):
+
+    >>> A = fsparse([1, 2, 2, 1], [1, 1, 2, 1], [1.0, 2.0, 3.0, 4.0],
+    ...             (2, 2))
+    >>> np.asarray(ops.to_dense(A))
+    array([[5., 0.],
+           [2., 3.]], dtype=float32)
+    >>> np.asarray(ops.matmul(A, jnp.ones(2, jnp.float32)))
+    array([5., 5.], dtype=float32)
+    >>> np.asarray(ops.diagonal(A))
+    array([5., 3.], dtype=float32)
+
+    ``transpose`` of a CSC is a free reinterpretation (a CSR sharing
+    the same arrays), and back:
+
+    >>> T = ops.transpose(A)
+    >>> type(T).__name__, T.shape
+    ('CSR', (2, 2))
+    >>> np.asarray(ops.to_dense(T))
+    array([[5., 2.],
+           [0., 3.]], dtype=float32)
+
+    ``add``/``scale`` stay in the input's format:
+
+    >>> Z = ops.add(A, ops.scale(A, -1.0))
+    >>> float(jnp.abs(ops.to_dense(Z)).max())
+    0.0
+
+    And the whole pipeline differentiates — the backward of the
+    assembly fill is the O(L) gather-by-slot through the plan:
+
+    >>> pat = plan(np.array([0, 1, 1]), np.array([0, 0, 1]), (2, 2))
+    >>> loss = lambda v: ops.matmul(pat.assemble(v),
+    ...                             jnp.ones(2, jnp.float32)).sum()
+    >>> np.asarray(jax.grad(loss)(jnp.ones(3, jnp.float32)))
+    array([1., 1., 1.], dtype=float32)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coo import COO
+from ..core.csc import CSC, slot_columns, spmv as _csc_spmv
+from .formats import CSR, convert, format_of
+
+__all__ = [
+    "add",
+    "diagonal",
+    "matmul",
+    "register_op",
+    "scale",
+    "scatter_rows",
+    "to_dense",
+    "transpose",
+]
+
+# ---------------------------------------------------------------------------
+# Per-format dispatch (rides on the format registry: names come from
+# repro.sparse.formats.format_of, so registering a format there and an
+# op here is all a new format needs)
+# ---------------------------------------------------------------------------
+_OP_IMPLS: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_op(op: str, fmt: str, fn: Callable) -> None:
+    """Register ``fn`` as the ``op`` implementation for format ``fmt``."""
+    _OP_IMPLS[(op, fmt)] = fn
+
+
+def _dispatch(op: str, A, *, hub: str | None = None):
+    """Implementation for ``(op, format_of(A))``, optionally via a hub.
+
+    When no direct implementation exists and ``hub`` is given, ``A`` is
+    converted through the format registry and the hub's implementation
+    is used (the result is then in terms of the hub format — cheap for
+    ``"coo"``, whose conversions never re-sort).
+    """
+    fmt = format_of(A)
+    fn = _OP_IMPLS.get((op, fmt))
+    if fn is not None:
+        return fn, A
+    if hub is not None and (op, hub) in _OP_IMPLS:
+        return _OP_IMPLS[(op, hub)], convert(A, hub)
+    raise TypeError(
+        f"no {op!r} implementation for format {fmt!r} "
+        f"(registered: {sorted(k for k in _OP_IMPLS if k[0] == op)})"
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul — spmv / spmm
+# ---------------------------------------------------------------------------
+def _coo_spmv(A: COO, x: jax.Array) -> jax.Array:
+    valid = A.rows < A.M
+    contrib = jnp.where(valid, A.vals * x[jnp.where(valid, A.cols, 0)], 0.0)
+    return jnp.zeros((A.M,), contrib.dtype).at[
+        jnp.where(valid, A.rows, 0)
+    ].add(contrib)
+
+
+def _csr_spmv(A: CSR, x: jax.Array) -> jax.Array:
+    rows = slot_columns(A.indptr, A.nzmax)  # row of each slot
+    valid = A.indices < A.N
+    contrib = jnp.where(
+        valid, A.data * x[jnp.where(valid, A.indices, 0)], 0.0
+    )
+    return jax.ops.segment_sum(
+        contrib, jnp.clip(rows, 0, A.M - 1), num_segments=A.M
+    )
+
+
+def _sharded_spmv(A, x: jax.Array) -> jax.Array:
+    return A.spmv(x)
+
+
+def matmul(A, x: jax.Array) -> jax.Array:
+    """``A @ x`` (spmv) or ``A @ X`` (spmm, trailing column axis).
+
+    Dispatched per registered format; the CSC path carries the sparse
+    ``custom_vjp`` (backward for ``x`` is :func:`repro.core.csc.spmv_t`,
+    backward for ``A.data`` a structure gather), so ``jax.grad`` through
+    ``matmul(pat.assemble(vals), x)`` never builds a dense intermediate.
+    """
+    x = jnp.asarray(x)
+    fn, A = _dispatch("spmv", A, hub="csc")
+    if x.ndim == 1:
+        return fn(A, x)
+    if x.ndim == 2:
+        return jax.vmap(lambda col: fn(A, col), in_axes=1, out_axes=1)(x)
+    raise ValueError(f"matmul expects a vector or matrix, got ndim={x.ndim}")
+
+
+# ---------------------------------------------------------------------------
+# transpose — CSC<->CSR are free reinterpretations of the same arrays
+# ---------------------------------------------------------------------------
+def _csc_transpose(A: CSC) -> CSR:
+    # Aᵀ's rows are A's columns: the column pointer *is* the transposed
+    # row pointer and the row indices *are* the transposed column
+    # indices (sentinel M == the CSR col sentinel for shape (N, M)).
+    return CSR(data=A.data, indices=A.indices, indptr=A.indptr,
+               nnz=A.nnz, shape=(A.N, A.M))
+
+
+def _csr_transpose(A: CSR) -> CSC:
+    return CSC(data=A.data, indices=A.indices, indptr=A.indptr,
+               nnz=A.nnz, shape=(A.N, A.M))
+
+
+def _coo_transpose(A: COO) -> COO:
+    valid = A.rows < A.M
+    return COO(
+        rows=jnp.where(valid, A.cols, A.N).astype(jnp.int32),
+        cols=jnp.where(valid, A.rows, 0).astype(jnp.int32),
+        vals=A.vals,
+        shape=(A.N, A.M),
+    )
+
+
+def transpose(A):
+    """``Aᵀ``.  CSC <-> CSR is a zero-cost array reinterpretation;
+    COO swaps its index vectors; block-partitioned formats fall back to
+    the COO hub (a block-row partition has no block-col dual)."""
+    fn, A = _dispatch("transpose", A, hub="coo")
+    return fn(A)
+
+
+# ---------------------------------------------------------------------------
+# add / scale / diagonal / to_dense
+# ---------------------------------------------------------------------------
+def add(A, B):
+    """``A + B`` for any two registered formats of equal shape.
+
+    Concatenates the COO triplet streams and reassembles into ``A``'s
+    format — one plan over L_A + L_B triplets; overlapping structure
+    merges by the duplicate-summing rule of assembly.
+    """
+    if tuple(A.shape) != tuple(B.shape):
+        raise ValueError(f"shape mismatch: {A.shape} vs {B.shape}")
+    ca, cb = convert(A, "coo"), convert(B, "coo")
+    dtype = jnp.promote_types(ca.vals.dtype, cb.vals.dtype)
+    out = COO(
+        rows=jnp.concatenate([ca.rows, cb.rows]),
+        cols=jnp.concatenate([ca.cols, cb.cols]),
+        vals=jnp.concatenate(
+            [ca.vals.astype(dtype), cb.vals.astype(dtype)]
+        ),
+        shape=tuple(A.shape),
+    )
+    fmt = format_of(A)
+    if fmt == "coo":
+        return out
+    kwargs = {"mesh": A.mesh} if fmt == "sharded" else {}
+    return convert(out, fmt, **kwargs)
+
+
+def scale(A, alpha):
+    """``alpha * A`` — elementwise scale of the stored values, format
+    and structure preserved."""
+    field = "vals" if isinstance(A, COO) else "data"
+    return dataclasses.replace(
+        A, **{field: getattr(A, field) * alpha}
+    )
+
+
+def _coo_diagonal(A: COO) -> jax.Array:
+    k = min(A.M, A.N)
+    valid = jnp.logical_and(A.rows < A.M, A.rows == A.cols)
+    return (
+        jnp.zeros((k,), A.vals.dtype)
+        .at[jnp.where(valid, A.rows, k)]
+        .add(jnp.where(valid, A.vals, 0.0), mode="drop")
+    )
+
+
+def diagonal(A) -> jax.Array:
+    """Main diagonal as a dense ``min(M, N)`` vector (duplicates sum)."""
+    fn, A = _dispatch("diagonal", A, hub="coo")
+    return fn(A)
+
+
+def to_dense(A) -> jax.Array:
+    """Dense materialization — the universal (expensive) escape hatch."""
+    return A.to_dense()
+
+
+# ---------------------------------------------------------------------------
+# scatter_rows — the shared dispatch/combine primitive
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _scatter_rows(num_slots, slot, rows):
+    return (
+        jnp.zeros((num_slots,) + rows.shape[1:], rows.dtype)
+        .at[slot]
+        .set(rows, mode="drop")
+    )
+
+
+def _scatter_rows_fwd(num_slots, slot, rows):
+    return _scatter_rows(num_slots, slot, rows), slot
+
+
+def _scatter_rows_bwd(num_slots, slot, g):
+    keep = slot < num_slots
+    keep = keep.reshape(keep.shape + (1,) * (g.ndim - 1))
+    g_rows = jnp.where(
+        keep, g[jnp.clip(slot, 0, num_slots - 1)], jnp.zeros((), g.dtype)
+    )
+    return (None, g_rows)
+
+
+_scatter_rows.defvjp(_scatter_rows_fwd, _scatter_rows_bwd)
+
+
+def scatter_rows(slot: jax.Array, rows: jax.Array, *, num_slots: int
+                 ) -> jax.Array:
+    """Collision-free row scatter with a gather backward.
+
+    ``out[slot[k]] = rows[k]`` for ``slot[k] < num_slots`` (out-of-range
+    slots — capacity overflow sentinels — are dropped); slots must be
+    unique, which every fsparse-style placement guarantees by
+    construction.  The ``custom_vjp`` backward is the masked gather
+    ``g_rows[k] = g[slot[k]]`` — the same irank-replay the paper uses
+    for its combine step.  This is the primitive behind the MoE
+    dispatch/combine path and the embedding-gradient assembly in
+    :mod:`repro.train.sparse_grads`.
+    """
+    return _scatter_rows(num_slots, slot, rows)
+
+
+# ---------------------------------------------------------------------------
+# Built-in registrations
+# ---------------------------------------------------------------------------
+register_op("spmv", "csc", _csc_spmv)
+register_op("spmv", "csr", _csr_spmv)
+register_op("spmv", "coo", _coo_spmv)
+register_op("spmv", "sharded", _sharded_spmv)
+register_op("transpose", "csc", _csc_transpose)
+register_op("transpose", "csr", _csr_transpose)
+register_op("transpose", "coo", _coo_transpose)
+register_op("diagonal", "coo", _coo_diagonal)

@@ -21,12 +21,30 @@ the numeric phase needs:
   nnz     : int32 scalar  structural nonzero count
 
 ``SparsePattern.assemble(vals)`` is then only the O(L) gather +
-collision-free scatter-add — no sorting, no histogramming:
+collision-free scatter-reduce — no sorting, no histogramming:
 
     data = zeros(nzmax).at[slot].add(vals[perm], mode="drop")
 
-The dataclass is pytree-registered with only ``shape`` static, so plans
-pass freely through ``jax.jit`` / ``jax.vmap`` / ``lax.scan`` carries.
+Beyond the paper, the numeric phase is **transform-native**:
+
+* it carries a ``jax.custom_vjp`` whose backward is the O(L)
+  *gather-by-slot* through the stored plan — ``g_vals[perm[k]] =
+  w_k * g_data[slot[k]]`` with padding (``slot == nzmax``) masked —
+  so ``jax.grad``/``jax.vjp``/``jax.vmap`` compose through ``scatter``/
+  ``assemble``/``assemble_batch``/``reduce_rows`` with no re-sort and
+  no transpose-of-scatter.  Higher-order *reverse* mode (grad-of-grad)
+  works — the backward is plain jnp — but ``jax.custom_vjp`` excludes
+  forward-mode AD by JAX's design, so ``jax.jvp``/``jax.jacfwd``
+  through a fill raises ``TypeError`` (use reverse mode, the training
+  loop's direction);
+* duplicates can combine under any ``accum`` mode in :data:`ACCUM_MODES`
+  (``"sum"`` is Matlab ``sparse``; the others are ``accumarray``-style
+  reductions over each duplicate group, applied in stable input order
+  for ``"first"``/``"last"``).
+
+The dataclass is pytree-registered with ``shape`` and ``accum`` static,
+so plans pass freely through ``jax.jit`` / ``jax.vmap`` / ``lax.scan``
+carries.
 """
 from __future__ import annotations
 
@@ -39,6 +57,13 @@ import jax.numpy as jnp
 from ..core.coo import COO
 from ..core.csc import CSC
 from .dispatch import sorted_permutation
+
+#: duplicate-combination modes of the numeric phase.  ``"sum"`` is the
+#: Matlab ``sparse`` contract; the rest mirror ``accumarray`` with
+#: ``@min``/``@max``/``@mean`` and positional selection in stable input
+#: order (``"first"``/``"last"``).  Slots with no valid input (the
+#: padded tail) hold structural zeros under every mode.
+ACCUM_MODES = ("sum", "min", "max", "mean", "first", "last")
 
 
 @jax.tree_util.register_dataclass
@@ -57,6 +82,9 @@ class SparsePattern:
     indptr: jax.Array   # int32[N+1]
     nnz: jax.Array      # int32 scalar
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    accum: str = dataclasses.field(
+        default="sum", metadata=dict(static=True)
+    )
 
     # -- static geometry --------------------------------------------------
     @property
@@ -88,13 +116,16 @@ class SparsePattern:
         )
 
     # -- numeric phase ----------------------------------------------------
-    def assemble(self, vals: jax.Array) -> CSC:
-        """Numeric fill: O(L) gather + collision-free scatter-add.
+    def assemble(self, vals: jax.Array, *, accum: str | None = None) -> CSC:
+        """Numeric fill: O(L) gather + collision-free scatter-reduce.
 
         ``vals`` must be the value vector aligned with the ``rows``/
         ``cols`` this plan was built from (length L, any float dtype).
+        Differentiable: ``jax.grad``/``jax.vjp`` through the result's
+        ``data`` run the O(L) gather-by-slot backward (no re-sort).
+        ``accum`` overrides the plan's duplicate-combination mode.
         """
-        data = self.scatter(vals)
+        data = self.scatter(vals, accum=accum)
         return CSC(
             data=data,
             indices=self.indices,
@@ -103,7 +134,8 @@ class SparsePattern:
             shape=self.shape,
         )
 
-    def assemble_batch(self, vals_batch: jax.Array) -> CSC:
+    def assemble_batch(self, vals_batch: jax.Array,
+                       *, accum: str | None = None) -> CSC:
         """Vectorized fill of many value vectors sharing this structure.
 
         Returns a :class:`CSC` whose ``data`` carries a leading batch
@@ -112,7 +144,7 @@ class SparsePattern:
         with ``jax.vmap(f, in_axes=(CSC(data=0, indices=None, ...),))``
         or by indexing ``out.data[b]``.
         """
-        data = jax.vmap(self.scatter)(vals_batch)
+        data = jax.vmap(lambda v: self.scatter(v, accum=accum))(vals_batch)
         return CSC(
             data=data,
             indices=self.indices,
@@ -121,37 +153,54 @@ class SparsePattern:
             shape=self.shape,
         )
 
-    def scatter(self, vals: jax.Array) -> jax.Array:
-        """The raw O(L) numeric kernel: ``data`` array only (``prS``)."""
-        if vals.shape[-1] != self.L:
+    def scatter(self, vals: jax.Array, *, accum: str | None = None
+                ) -> jax.Array:
+        """The raw O(L) numeric kernel: ``data`` array only (``prS``).
+
+        Differentiable (``custom_vjp``): the backward pass is the O(L)
+        gather-by-slot through this plan, padding-masked — no re-sort.
+        """
+        accum = validate_accum(self.accum if accum is None else accum,
+                               vals.dtype)
+        if vals.ndim != 1 or vals.shape[0] != self.L:
             raise ValueError(
-                f"vals has length {vals.shape[-1]} but this pattern was "
-                f"planned for L={self.L} triplets"
+                f"vals has shape {vals.shape} but this pattern was "
+                f"planned for a length-L={self.L} vector; use "
+                "assemble_batch/vmap for batched fills"
             )
         dtype = fill_dtype(vals)
-        return (
-            jnp.zeros((self.nzmax,), dtype)
-            .at[self.slot]
-            .add(vals[self.perm].astype(dtype), mode="drop")
+        return _scatter_vjp(
+            self.nzmax, accum, self.perm, self.slot, vals.astype(dtype)
         )
 
-    def reduce_rows(self, mat: jax.Array) -> jax.Array:
+    def reduce_rows(self, mat: jax.Array, *, accum: str | None = None
+                    ) -> jax.Array:
         """Segment-reduce a row-per-triplet matrix ``[L, D] -> [nzmax, D]``.
 
         The generalization of :meth:`scatter` to vector-valued triplets
         (e.g. embedding-gradient rows); duplicates of the same (i, j)
-        pair sum row-wise into one slot.
+        pair combine row-wise (elementwise for min/max) into one slot
+        under the plan's ``accum`` mode, like every other fill.
+        Differentiable via the same gather-by-slot ``custom_vjp`` as
+        :meth:`scatter` (so e.g. the embedding-gradient assembly in
+        ``repro.train.sparse_grads`` is itself twice-differentiable);
+        dtype passes through unchanged — hence min/max require an
+        inexact dtype (their ±inf identity has no integer encoding).
         """
+        accum = validate_accum(self.accum if accum is None else accum,
+                               mat.dtype)
+        if accum in ("min", "max") \
+                and not jnp.issubdtype(mat.dtype, jnp.inexact):
+            raise ValueError(
+                f"reduce_rows(accum={accum!r}) needs an inexact dtype "
+                f"(got {mat.dtype}); cast the rows first"
+            )
         if mat.shape[0] != self.L:
             raise ValueError(
                 f"mat has {mat.shape[0]} rows but this pattern was "
                 f"planned for L={self.L} triplets"
             )
-        return (
-            jnp.zeros((self.nzmax,) + mat.shape[1:], mat.dtype)
-            .at[self.slot]
-            .add(mat[self.perm], mode="drop")
-        )
+        return _scatter_vjp(self.nzmax, accum, self.perm, self.slot, mat)
 
 
 def fill_dtype(vals: jax.Array) -> jnp.dtype:
@@ -180,6 +229,158 @@ def first_flags(slot: jax.Array, nzmax: int) -> jax.Array:
     valid = slot < nzmax
     prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), slot[:-1]])
     return jnp.logical_and(valid, slot != prev)
+
+
+def last_flags(slot: jax.Array, nzmax: int) -> jax.Array:
+    """Last-occurrence flags of each kept slot in the sorted stream.
+
+    The mirror of :func:`first_flags`; valid because duplicates of one
+    (i, j) pair are adjacent (padding never interrupts an equal-key run
+    — its ``row == M`` sentinel is a distinct sort key).
+    """
+    valid = slot < nzmax
+    nxt = jnp.concatenate([slot[1:], jnp.full((1,), -1, jnp.int32)])
+    return jnp.logical_and(valid, slot != nxt)
+
+
+def validate_accum(accum: str, dtype=None) -> str:
+    """Check an ``accum`` mode name (and its dtype compatibility)."""
+    if accum not in ACCUM_MODES:
+        raise ValueError(
+            f"unknown accum mode {accum!r}; expected one of {ACCUM_MODES}"
+        )
+    if dtype is not None and accum in ("min", "max") \
+            and jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        raise ValueError(
+            f"accum={accum!r} is undefined for complex values "
+            "(no total order); use 'sum'/'mean'/'first'/'last'"
+        )
+    return accum
+
+
+def accum_identity(accum: str, dtype) -> jax.Array:
+    """Neutral element of an ``accum`` mode for ``dtype`` (inexact)."""
+    if accum == "min":
+        return jnp.array(jnp.inf, dtype)
+    if accum == "max":
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.zeros((), dtype)
+
+
+def _slot_counts(nzmax: int, slot: jax.Array) -> jax.Array:
+    """Valid duplicate count per output slot (padding auto-dropped)."""
+    return (
+        jnp.zeros((nzmax,), jnp.int32)
+        .at[slot]
+        .add(jnp.int32(1), mode="drop")
+    )
+
+
+def _bcast(mask: jax.Array, ndim: int) -> jax.Array:
+    """Right-pad a 1-d mask with singleton axes up to ``ndim`` dims."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _scatter_reduce(nzmax: int, accum: str, perm, slot, vals):
+    """Numeric phase, any accum mode: pure-jnp scatter reductions.
+
+    ``vals`` is ``[L, ...]`` (already dtype-resolved); the result is
+    ``[nzmax, ...]``.  This is the jnp fallback of the masked
+    sorted-segment reductions (the Pallas streams live in
+    ``repro.kernels.segment_sum``); both meet the same contract.
+    """
+    v = vals[perm]
+    out_shape = (nzmax,) + v.shape[1:]
+    if accum == "sum":
+        return jnp.zeros(out_shape, v.dtype).at[slot].add(v, mode="drop")
+    if accum in ("min", "max"):
+        ident = accum_identity(accum, v.dtype)
+        ref = jnp.full(out_shape, ident, v.dtype).at[slot]
+        red = ref.min(v, mode="drop") if accum == "min" \
+            else ref.max(v, mode="drop")
+        occupied = _bcast(_slot_counts(nzmax, slot) > 0, red.ndim)
+        return jnp.where(occupied, red, jnp.zeros((), v.dtype))
+    if accum == "mean":
+        s = jnp.zeros(out_shape, v.dtype).at[slot].add(v, mode="drop")
+        n = jnp.maximum(_slot_counts(nzmax, slot), 1).astype(v.dtype)
+        return s / _bcast(n, s.ndim)
+    if accum == "first":
+        keep = first_flags(slot, nzmax)
+    else:  # "last"
+        keep = last_flags(slot, nzmax)
+    return (
+        jnp.zeros(out_shape, v.dtype)
+        .at[jnp.where(keep, slot, nzmax)]
+        .set(v, mode="drop")
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _scatter_vjp(nzmax: int, accum: str, perm, slot, vals):
+    """Differentiable numeric phase (forward == :func:`_scatter_reduce`).
+
+    Every accum mode's output is ``data[s] = Σ_k w_k · v_k`` for
+    per-element weights ``w`` (1 for sum, 1/count for mean, a 0/1
+    selection for min/max/first/last), so one backward rule covers all
+    modes: ``g_vals[perm[k]] = w_k · g_data[slot[k]]`` — an O(L)
+    padding-masked gather-by-slot plus one collision-free scatter
+    through ``perm`` (a permutation).  No re-sort, no XLA
+    transpose-of-scatter.  min/max use the subgradient that routes to
+    the *first* attaining element of each duplicate group
+    (deterministic tie-break).
+    """
+    return _scatter_reduce(nzmax, accum, perm, slot, vals)
+
+
+def _scatter_vjp_fwd(nzmax, accum, perm, slot, vals):
+    out = _scatter_reduce(nzmax, accum, perm, slot, vals)
+    # min/max need the attained value to recompute the winner in bwd;
+    # every other mode's weights derive from slot alone (kept O(L)-lean
+    # so the forward fill pays nothing when not differentiated).
+    res = (perm, slot, vals, out) if accum in ("min", "max") \
+        else (perm, slot)
+    return out, res
+
+
+def _scatter_vjp_bwd(nzmax, accum, res, g):
+    perm, slot = res[0], res[1]
+    L = perm.shape[0]
+    valid = slot < nzmax
+    slot_c = jnp.clip(slot, 0, nzmax - 1)
+    g_sorted = jnp.where(_bcast(valid, g.ndim), g[slot_c],
+                         jnp.zeros((), g.dtype))
+    if accum == "mean":
+        n = jnp.maximum(_slot_counts(nzmax, slot), 1).astype(g.dtype)
+        g_sorted = g_sorted / _bcast(n[slot_c], g.ndim)
+    elif accum == "first":
+        g_sorted = jnp.where(_bcast(first_flags(slot, nzmax), g.ndim),
+                             g_sorted, jnp.zeros((), g.dtype))
+    elif accum == "last":
+        g_sorted = jnp.where(_bcast(last_flags(slot, nzmax), g.ndim),
+                             g_sorted, jnp.zeros((), g.dtype))
+    elif accum in ("min", "max"):
+        vals, out = res[2], res[3]
+        v = vals[perm]
+        attained = jnp.logical_and(_bcast(valid, v.ndim), v == out[slot_c])
+        # deterministic subgradient: the first attaining element of each
+        # duplicate group wins ties (elementwise over trailing axes)
+        pos = jnp.where(
+            attained, _bcast(jnp.arange(L, dtype=jnp.int32), v.ndim),
+            jnp.int32(L),
+        )
+        first_pos = (
+            jnp.full((nzmax,) + v.shape[1:], L, jnp.int32)
+            .at[slot]
+            .min(pos, mode="drop")
+        )
+        winner = jnp.logical_and(attained, pos == first_pos[slot_c])
+        g_sorted = jnp.where(winner, g_sorted, jnp.zeros((), g.dtype))
+    # perm is a permutation of [0, L): the un-sort is collision-free
+    g_vals = jnp.zeros(g_sorted.shape, g_sorted.dtype).at[perm].set(g_sorted)
+    return (None, None, g_vals)
+
+
+_scatter_vjp.defvjp(_scatter_vjp_fwd, _scatter_vjp_bwd)
 
 
 def pattern_from_perm(
@@ -230,7 +431,7 @@ def pattern_from_perm(
     )
 
 
-@partial(jax.jit, static_argnames=("shape", "nzmax", "method"))
+@partial(jax.jit, static_argnames=("shape", "nzmax", "method", "accum"))
 def plan(
     rows: jax.Array,
     cols: jax.Array,
@@ -238,6 +439,7 @@ def plan(
     *,
     nzmax: int | None = None,
     method: str | None = None,
+    accum: str = "sum",
 ) -> SparsePattern:
     """Symbolic phase: run the paper's Parts 1-4 once, capture the plan.
 
@@ -246,6 +448,8 @@ def plan(
     backend (``"jnp" | "fused" | "pallas" | "radix"`` — see
     ``repro.sparse.dispatch``; ``None`` resolves to the backend-aware
     production default: ``"radix"`` on TPU, ``"fused"`` off-TPU).
+    ``accum`` fixes how duplicate (i, j) values combine in the numeric
+    phase (see :data:`ACCUM_MODES`; structure is accum-independent).
     The result is reusable for any
     number of :meth:`SparsePattern.assemble` calls with different value
     vectors.
@@ -253,13 +457,16 @@ def plan(
     M, N = int(shape[0]), int(shape[1])
     L = rows.shape[0]
     nzmax = L if nzmax is None else nzmax
+    validate_accum(accum)
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     perm = sorted_permutation(rows, cols, M=M, N=N, method=method)
-    return pattern_from_perm(rows, cols, perm, M=M, N=N, nzmax=nzmax)
+    pat = pattern_from_perm(rows, cols, perm, M=M, N=N, nzmax=nzmax)
+    return pat if accum == "sum" else dataclasses.replace(pat, accum=accum)
 
 
 def plan_coo(coo: COO, *, nzmax: int | None = None,
-             method: str | None = None) -> SparsePattern:
+             method: str | None = None, accum: str = "sum") -> SparsePattern:
     """``plan`` over a :class:`repro.core.COO` container."""
-    return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method)
+    return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method,
+                accum=accum)

@@ -249,7 +249,13 @@ class ShardedPattern:
 
     # -- numeric phase -----------------------------------------------------
     def assemble(self, vals: jax.Array) -> ShardedCSC:
-        """O(L/p) fill: bucket scatter + one all_to_all + block scatter."""
+        """O(L/p) fill: bucket scatter + one all_to_all + block scatter.
+
+        Differentiable: the fill carries a ``custom_vjp`` whose backward
+        replays the Phase-B routing *transposed* (gather-by-slot per
+        block, the involutive ``all_to_all``, send-bucket gather) — see
+        :func:`_route_fill`.
+        """
         vals = self._pad_vals(vals)
         data = _fill_sharded(
             self.send_slot, self.perm, self.slot, vals[None],
@@ -462,10 +468,20 @@ def route_values(send_slot, v, *, p: int, capacity: int, axis: str):
     return buf.reshape(v.shape[0], drop)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "capacity", "nzb",
-                                   "squeeze"))
-def _fill_sharded(send_slot, perm, slot, vals, *, mesh, axis, capacity,
-                  nzb, squeeze):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _route_fill(mesh, axis, capacity, nzb, send_slot, perm, slot, vals):
+    """Sharded numeric phase with an explicit shard_map-transpose VJP.
+
+    Forward (per device): bucket scatter -> one tiled ``all_to_all`` ->
+    collision-free gather+scatter through the block pattern.  The
+    backward is the exact transpose of that routing, replayed on
+    cotangents: gather-by-slot through the block pattern (set through
+    ``perm``, a permutation of the received stream), the *same* tiled
+    ``all_to_all`` (the (source, chunk) block transpose is an
+    involution, so it is its own transpose), and a padding-masked
+    gather out of the send buckets — O(L/p) per device, no re-routing
+    analysis and no XLA transpose-of-scatter.
+    """
     p = mesh.shape[axis]
 
     def _local(send_slot, perm, slot, v):
@@ -478,12 +494,63 @@ def _fill_sharded(send_slot, perm, slot, vals, *, mesh, axis, capacity,
         )
         return data[None]
 
-    data = shard_map(
+    return shard_map(
         _local,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(None, axis)),
         out_specs=P(axis),
     )(send_slot, perm, slot, vals)
+
+
+def _route_fill_fwd(mesh, axis, capacity, nzb, send_slot, perm, slot, vals):
+    out = _route_fill(mesh, axis, capacity, nzb, send_slot, perm, slot, vals)
+    return out, (send_slot, perm, slot)
+
+
+def _route_fill_bwd(mesh, axis, capacity, nzb, res, g):
+    send_slot, perm, slot = res
+    p = mesh.shape[axis]
+    drop = p * capacity
+
+    def _local(send_slot, perm, slot, g):
+        gb = g[0]                               # [B, nzb] own block's ct
+        keep = slot[0] < nzb
+        g_recv = jnp.where(
+            keep[None, :], gb[:, jnp.clip(slot[0], 0, nzb - 1)],
+            jnp.zeros((), gb.dtype),
+        )
+        g_buf = (
+            jnp.zeros((gb.shape[0], drop), gb.dtype)
+            .at[:, perm[0]]
+            .set(g_recv)                        # perm is a permutation
+        )
+        g_buf = jax.lax.all_to_all(             # involution: own transpose
+            g_buf.reshape(gb.shape[0], p, capacity), axis, 1, 1, tiled=True
+        ).reshape(gb.shape[0], drop)
+        sent = send_slot[0] < drop
+        return jnp.where(
+            sent[None, :], g_buf[:, jnp.clip(send_slot[0], 0, drop - 1)],
+            jnp.zeros((), g_buf.dtype),
+        )
+
+    g_vals = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(None, axis),
+    )(send_slot, perm, slot, g)
+    return (None, None, None, g_vals)
+
+
+_route_fill.defvjp(_route_fill_fwd, _route_fill_bwd)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "capacity", "nzb",
+                                   "squeeze"))
+def _fill_sharded(send_slot, perm, slot, vals, *, mesh, axis, capacity,
+                  nzb, squeeze):
+    data = _route_fill(mesh, axis, capacity, nzb, send_slot, perm, slot,
+                       vals)
     if squeeze:
         data = data[:, 0]
     return data

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from functools import partial
 
 from ..sparse import pattern_from_perm
+from ..sparse.ops import scatter_rows
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -53,11 +54,10 @@ def _bwd(meta, res, g):
     summed = pat.reduce_rows(gm)                        # [T, D] slot sums
     # pat.indices holds the unique token of each slot (V sentinel in the
     # padded tail -> dropped): ONE collision-free scatter of unique rows.
-    dtable = (
-        jnp.zeros((V, D), jnp.float32)
-        .at[pat.indices]
-        .add(summed, mode="drop")
-    )
+    # Both reduce_rows and scatter_rows ride the differentiable sparse
+    # API (gather-by-slot custom VJPs), so this backward is itself
+    # transposable — grad-of-grad through the embedding works.
+    dtable = scatter_rows(pat.indices, summed, num_slots=V)
     return dtable.astype(jnp.dtype(dtype)), None
 
 

@@ -4,3 +4,7 @@ import sys
 # tests see ONE device (the dry-run sets its own 512-device flag in a
 # subprocess); src/ layout without install.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# consider_namespace_packages (needed for --doctest-modules over the
+# src/repro namespace package) stops pytest from auto-inserting this
+# directory, so the shared test helpers (hypothesis_compat) need it back
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
