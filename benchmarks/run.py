@@ -24,6 +24,8 @@ Mapping to the paper:
   bench_parts          Figs 4.1-4.3 per-part load distribution, plus a
                        per-backend sort/plan/fill comparison of every
                        registered ``method=``
+  bench_spgemm         beyond-paper: two-phase SpGEMM — plan-once /
+                       refill-many sparse products vs a scipy oracle
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
   bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
@@ -43,6 +45,14 @@ import time
 #: catch.  Oracle/model rows are reported but not gated.
 GATED_ROW_RE = re.compile(r"(_method_|_fill_|_reuse$|_grad$|_post$)")
 
+#: smallest baseline timing a ratio is meaningful against.  Rows are
+#: recorded at 0.1 us resolution, so a tiny smoke-scale row on a fast
+#: machine can legitimately round to 0.0 — dividing by it would turn
+#: timer noise into a spurious REGRESSION (or, pre-floor, a
+#: ZeroDivisionError).  Such rows are skipped with a warning instead
+#: of gated.
+COMPARE_EPS_US = 0.05
+
 
 def compare_rows(results: dict, base: dict, *, scale: float,
                  tolerance: float) -> list[str]:
@@ -50,6 +60,8 @@ def compare_rows(results: dict, base: dict, *, scale: float,
 
     Returns a list of human-readable failures (empty == gate passed);
     prints a comparison table for every gated row found in both runs.
+    Baseline rows timed below :data:`COMPARE_EPS_US` are skipped with a
+    warning — a ratio against a ~0 denominator gates nothing but noise.
     """
     base_scale = base.get("meta", {}).get("scale")
     if base_scale is not None and abs(base_scale - scale) > 1e-12:
@@ -62,17 +74,27 @@ def compare_rows(results: dict, base: dict, *, scale: float,
         for r in rows
     }
     failures: list[str] = []
-    matched = 0
+    matched = skipped = 0
     print("compare: name,base_us,new_us,ratio,verdict", file=sys.stderr)
     for rows in results.values():
         for r in rows:
             name = r["name"]
             if not GATED_ROW_RE.search(name) or name not in base_by_name:
                 continue
-            matched += 1
             b_us = float(base_by_name[name]["us_per_call"])
             n_us = float(r["us_per_call"])
-            ratio = n_us / max(b_us, 1e-9)
+            if b_us < COMPARE_EPS_US:
+                skipped += 1
+                print(
+                    f"compare: WARNING {name} skipped — baseline timing "
+                    f"{b_us:.1f}us is below the {COMPARE_EPS_US}us floor "
+                    "(timer resolution); re-record the baseline at a "
+                    "larger --scale to gate this row",
+                    file=sys.stderr,
+                )
+                continue
+            matched += 1
+            ratio = n_us / b_us
             verdict = "ok"
             if ratio > 1.0 + tolerance:
                 verdict = "REGRESSION"
@@ -84,12 +106,19 @@ def compare_rows(results: dict, base: dict, *, scale: float,
                 verdict = "improved"
             print(f"compare: {name},{b_us:.1f},{n_us:.1f},{ratio:.2f},"
                   f"{verdict}", file=sys.stderr)
-    if matched == 0:
+    if matched == 0 and skipped == 0:
         # a rename / de-registration must not silently disarm the gate
         failures.append(
             "no gated plan/fill row matched between this run and the "
             "baseline — the gate checked nothing (row names renamed, or "
             "the baseline lacks the benches this run executed)"
+        )
+    elif matched == 0:
+        print(
+            "compare: WARNING every matched row was below the timing "
+            "floor — the gate checked nothing; re-record the baseline "
+            "at a larger --scale",
+            file=sys.stderr,
         )
     return failures
 
@@ -115,6 +144,7 @@ def main() -> None:
         bench_parts,
         bench_reassemble,
         bench_shard_reassemble,
+        bench_spgemm,
         bench_spmv,
         bench_stream,
         bench_table42,
@@ -128,6 +158,7 @@ def main() -> None:
         "shard_reassemble": lambda: bench_shard_reassemble.run(
             scale=args.scale
         ),
+        "spgemm": lambda: bench_spgemm.run(scale=args.scale),
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),

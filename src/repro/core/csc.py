@@ -50,8 +50,14 @@ class CSC:
         return csc_to_dense(self.data, self.indices, self.indptr, M=self.M, N=self.N)
 
     # -- linear algebra ---------------------------------------------------
-    def __matmul__(self, x: jax.Array) -> jax.Array:
-        return spmv(self, x)
+    def __matmul__(self, x):
+        """``A @ x`` via ``repro.sparse.ops.matmul`` — one dispatch
+        point: spmv/spmm for dense operands, the plan-cached SpGEMM
+        path (symbolic product + O(flops) refill) for a registered
+        sparse format."""
+        from ..sparse.ops import matmul
+
+        return matmul(self, x)
 
 
 @partial(jax.jit, static_argnames=("M", "N"))

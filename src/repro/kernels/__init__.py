@@ -16,6 +16,7 @@ from .assembly_ops import (
     fill_fused,
     fill_pallas,
     fill_sharded_pallas,
+    multiply_fused,
     plan_pallas,
 )
 from .common import INTERPRET
@@ -23,12 +24,14 @@ from .counting_sort.ops import counting_sort
 from .hist.ops import block_offsets, histogram
 from .radix_sort.ops import plan_digit_passes, radix_sort_pair
 from .segment_sum.ops import (
+    gather2_segment_sum_sorted,
     gather_segment_reduce_sorted,
     gather_segment_sum_sorted,
     segment_sum_sorted,
 )
 from .segment_sum.segment_sum import (
     blocked_cumsum,
+    gather2_masked_cumsum,
     gather_masked_cumsum,
     gather_masked_segscan,
 )
@@ -44,11 +47,14 @@ __all__ = [
     "fill_fused",
     "fill_pallas",
     "fill_sharded_pallas",
+    "gather2_masked_cumsum",
+    "gather2_segment_sum_sorted",
     "gather_masked_cumsum",
     "gather_masked_segscan",
     "gather_segment_reduce_sorted",
     "gather_segment_sum_sorted",
     "histogram",
+    "multiply_fused",
     "plan_digit_passes",
     "plan_pallas",
     "radix_sort_pair",

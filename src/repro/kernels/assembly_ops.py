@@ -14,8 +14,10 @@ two-phase API of :mod:`repro.sparse`:
 ``plan_pallas`` is the symbolic phase (reusable ``SparsePattern``);
 ``fill_fused`` is the fused numeric fill; ``fill_pallas`` keeps the
 unfused two-kernel reduce for comparison; ``assemble_pallas`` is the
-one-shot plan + fused fill.  Tests assert bit-identical structure vs.
-the NumPy Matlab oracle.
+one-shot plan + fused fill; ``multiply_fused`` is the SpGEMM numeric
+phase (two resident operand gathers + multiply + reduce in one kernel,
+over a ``repro.sparse.spgemm.ProductPattern``).  Tests assert
+bit-identical structure vs. the NumPy Matlab oracle.
 """
 from __future__ import annotations
 
@@ -29,10 +31,17 @@ from jax.sharding import PartitionSpec as P
 from ..core.compat import shard_map
 from ..core.csc import CSC
 from ..sparse.dispatch import sorted_permutation
-from ..sparse.pattern import SparsePattern, fill_dtype, pattern_from_perm
+from ..sparse.pattern import (
+    SparsePattern,
+    fill_dtype,
+    pattern_from_perm,
+    trivial_pattern,
+)
 from ..sparse.sharded import ShardedCSC, ShardedPattern, route_values
+from ..sparse.spgemm import ProductPattern
 from .segment_sum.ops import (
     accum_dtype,
+    gather2_segment_sum_sorted,
     gather_segment_reduce_sorted,
     gather_segment_sum_sorted,
     segment_sum_sorted,
@@ -61,6 +70,10 @@ def plan_pallas(
     """
     L = rows.shape[0]
     nzmax = L if nzmax is None else nzmax
+    if L == 0 or M == 0 or N == 0:
+        # Matlab empty-matrix semantics: valid all-zero pattern, no
+        # radix passes over an empty (or all-sentinel) stream
+        return trivial_pattern(L, (M, N), nzmax=nzmax)
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     perm = sorted_permutation(
@@ -99,6 +112,49 @@ def fill_fused(
         indices=pattern.indices,
         indptr=pattern.indptr,
         nnz=pattern.nnz,
+        shape=pattern.shape,
+    )
+
+
+def multiply_fused(
+    pattern: ProductPattern,
+    data_A: jax.Array,
+    data_B: jax.Array,
+    *,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> CSC:
+    """Fused SpGEMM numeric phase: gathers + multiply + reduce in one
+    kernel.
+
+    The jnp :meth:`~repro.sparse.spgemm.ProductPattern.multiply` path
+    materializes the expansion product stream before its scatter; here
+    the two operand gathers, the product, the padding mask and the
+    prefix sum run in a single Pallas kernel
+    (:func:`~repro.kernels.segment_sum.ops.gather2_segment_sum_sorted`)
+    with both operand value vectors VMEM-resident — the same residency
+    budget and blocked fallback as :func:`fill_fused`.  Bit-compatible
+    dtype contract with ``multiply`` (shared ``fill_dtype`` /
+    ``accum_dtype`` rules).
+    """
+    if data_A.ndim != 1 or data_A.shape[0] != pattern.a_capacity \
+            or data_B.ndim != 1 or data_B.shape[0] != pattern.b_capacity:
+        raise ValueError(
+            f"operand data shapes {data_A.shape}/{data_B.shape} do not "
+            f"match the planned 1-d capacities "
+            f"({pattern.a_capacity}/{pattern.b_capacity})"
+        )
+    dtype = jnp.promote_types(data_A.dtype, data_B.dtype)
+    totals = gather2_segment_sum_sorted(
+        data_A.astype(dtype), data_B.astype(dtype),
+        pattern.sa, pattern.sb, pattern.pattern.slot,
+        num_segments=pattern.nzmax, block_b=block_b, interpret=interpret,
+    )
+    return CSC(
+        data=totals,
+        indices=pattern.pattern.indices,
+        indptr=pattern.pattern.indptr,
+        nnz=pattern.pattern.nnz,
         shape=pattern.shape,
     )
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ...sparse.pattern import (
     _slot_counts,
+    accum_dtype,  # re-exported: the shared 16-bit->f32 accumulator rule
     accum_identity,
     fill_dtype,
     first_flags,
@@ -26,25 +27,10 @@ from ...sparse.pattern import (
 )
 from .segment_sum import (
     blocked_cumsum,
+    gather2_masked_cumsum,
     gather_masked_cumsum,
     gather_masked_segscan,
 )
-
-
-def accum_dtype(dtype) -> jnp.dtype:
-    """Prefix-sum accumulator dtype for a value dtype.
-
-    Segment totals here are differences of a *global* running sum, so
-    accumulator error grows with the stream total, not the segment
-    length — a bf16/f16 cumsum saturates once the running sum passes
-    ~256 and later segments collapse to zero.  16-bit floats therefore
-    accumulate in f32; the O(nzmax) totals are cast back to the value
-    dtype by the caller.
-    """
-    dtype = jnp.dtype(dtype)
-    if dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dtype
 
 
 def _segment_totals(c: jax.Array, first: jax.Array, *,
@@ -90,6 +76,10 @@ def segment_sum_sorted(
     for the permuted-intermediate design: the reduce is one contiguous
     cumsum plus two size-``num_segments`` gathers.
     """
+    if vals.shape[0] == 0:
+        # empty stream (Matlab empty-matrix fill): nothing to scan, and
+        # the segment-boundary gathers of _segment_totals assume L >= 1
+        return jnp.zeros((num_segments,), vals.dtype)
     c = blocked_cumsum(vals, block_b=block_b, interpret=interpret)
     return _segment_totals(c, first, num_segments=num_segments)
 
@@ -144,6 +134,55 @@ def gather_segment_sum_sorted(
         c = gather_masked_cumsum(
             vals, perm, slot, num_segments=num_segments, block_b=block_b,
             interpret=interpret,
+        )
+    return _segment_totals(c, first, num_segments=num_segments) \
+        .astype(dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_b", "interpret")
+)
+def gather2_segment_sum_sorted(
+    vals_a: jax.Array,
+    vals_b: jax.Array,
+    sa: jax.Array,
+    sb: jax.Array,
+    slot: jax.Array,
+    *,
+    num_segments: int,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused SpGEMM numeric phase: segment totals of the expansion
+    product ``vals_a[sa] * vals_b[sb]`` masked by
+    ``slot < num_segments``, without materializing the product stream.
+
+    ``sa``/``sb``/``slot`` are the *sorted-order* expansion maps of a
+    ``ProductPattern`` (:mod:`repro.sparse.spgemm`).  Dtype follows the
+    :func:`repro.sparse.pattern.fill_dtype` contract on the promoted
+    operand dtype; 16-bit products accumulate in f32
+    (:func:`accum_dtype`).  Streams whose two resident operand buffers
+    exceed :data:`FUSED_RESIDENT_MAX_BYTES` fall back to materializing
+    the gathered product once and reducing with the blocked carry scan
+    — the same guard as :func:`gather_segment_sum_sorted`.
+    """
+    dtype = fill_dtype(jnp.promote_types(vals_a.dtype, vals_b.dtype))
+    if sa.shape[0] == 0:
+        return jnp.zeros((num_segments,), dtype)
+    acc = accum_dtype(dtype)
+    va = vals_a.astype(acc)
+    vb = vals_b.astype(acc)
+    first = first_flags(slot, num_segments)
+    resident = (va.shape[0] + vb.shape[0]) * va.dtype.itemsize
+    if resident > FUSED_RESIDENT_MAX_BYTES:
+        v_s = jnp.where(
+            slot < num_segments, va[sa] * vb[sb], jnp.zeros((), acc)
+        )
+        c = blocked_cumsum(v_s, interpret=interpret)
+    else:
+        c = gather2_masked_cumsum(
+            va, vb, sa, sb, slot, num_segments=num_segments,
+            block_b=block_b, interpret=interpret,
         )
     return _segment_totals(c, first, num_segments=num_segments) \
         .astype(dtype)

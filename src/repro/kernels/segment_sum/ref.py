@@ -20,6 +20,18 @@ def segment_sum_sorted_ref(vals, first, *, num_segments: int):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def gather2_segment_sum_sorted_ref(vals_a, vals_b, sa, sb, slot, *,
+                                   num_segments: int):
+    """jnp oracle for the fused SpGEMM reduce: segment totals of the
+    masked expansion product ``vals_a[sa] * vals_b[sb]``."""
+    valid = slot < num_segments
+    v = jnp.where(valid, vals_a[sa] * vals_b[sb], 0)
+    return jax.ops.segment_sum(
+        v, jnp.where(valid, slot, 0), num_segments=num_segments
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("accum", "num_segments"))
 def segment_reduce_sorted_ref(vals, perm, slot, *, accum: str,
                               num_segments: int):

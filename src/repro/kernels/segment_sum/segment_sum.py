@@ -179,6 +179,84 @@ def gather_masked_segscan(
     return out[:L]
 
 
+def _gather2_cumsum_kernel(sa_ref, sb_ref, slot_ref, va_ref, vb_ref,
+                           out_ref, carry_ref, *, nzmax: int):
+    """Fused SpGEMM numeric head: two gathers + multiply + carry cumsum.
+
+    The expansion product ``va[sa[k]] * vb[sb[k]]`` of the sorted
+    SpGEMM stream never exists in HBM: both operand value vectors stay
+    VMEM-resident across grid steps (like :func:`_gather_cumsum_kernel`
+    keeps its one vector), each step gathers its slice of both, forms
+    the product, masks padding (``slot >= nzmax``) and extends the
+    running prefix sum.
+    """
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    va = va_ref[...]
+    vb = vb_ref[...]
+    v = va[sa_ref[...]] * vb[sb_ref[...]]
+    v = jnp.where(slot_ref[...] < nzmax, v, jnp.zeros((), v.dtype))
+    c = jnp.cumsum(v)
+    out_ref[...] = c + carry_ref[0]
+    carry_ref[0] = carry_ref[0] + c[-1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_b", "interpret")
+)
+def gather2_masked_cumsum(
+    vals_a: jax.Array,
+    vals_b: jax.Array,
+    sa: jax.Array,
+    sb: jax.Array,
+    slot: jax.Array,
+    *,
+    num_segments: int,
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``cumsum(where(slot < num_segments, vals_a[sa] * vals_b[sb], 0))``
+    in one kernel pass.
+
+    Same residency contract as :func:`gather_masked_cumsum`, with TWO
+    resident operand vectors (callers budget ``vals_a`` + ``vals_b``
+    against ``ops.FUSED_RESIDENT_MAX_BYTES`` together).  ``vals_a`` and
+    ``vals_b`` must share a dtype (the caller resolves the promotion).
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    L = sa.shape[0]
+    block_b = min(block_b, round_up(max(L, 1), 4096))
+    Lp = round_up(max(L, block_b), block_b)
+    La = round_up(max(vals_a.shape[0], LANES), LANES)
+    Lb = round_up(max(vals_b.shape[0], LANES), LANES)
+    va_p = jnp.pad(vals_a, (0, La - vals_a.shape[0]))
+    vb_p = jnp.pad(vals_b, (0, Lb - vals_b.shape[0]))
+    # padding gathers element 0 of both but is masked by the sentinel
+    sa_p = jnp.pad(sa, (0, Lp - L))
+    sb_p = jnp.pad(sb, (0, Lp - L))
+    slot_p = jnp.pad(slot, (0, Lp - L), constant_values=num_segments)
+    out = pl.pallas_call(
+        functools.partial(_gather2_cumsum_kernel, nzmax=num_segments),
+        grid=(Lp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+            pl.BlockSpec((La,), lambda b: (0,)),
+            pl.BlockSpec((Lb,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Lp,), vals_a.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), vals_a.dtype)],
+        interpret=interpret,
+    )(sa_p, sb_p, slot_p, va_p, vb_p)
+    return out[:L]
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_segments", "block_b", "interpret")
 )

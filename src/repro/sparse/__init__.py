@@ -27,6 +27,13 @@ combine under any ``accum`` mode (``"sum"|"min"|"max"|"mean"|"first"|
 dispatched per registered format — so sparse matrices compose inside
 ``jax.jit`` / ``jax.grad`` / ``jax.vmap``.
 
+Sparse x sparse products get the same two-phase split
+(:mod:`repro.sparse.spgemm`): ``product_plan`` runs the symbolic
+SpGEMM analysis once per structure pair and the returned
+``ProductPattern.multiply`` is the O(flops) differentiable refill;
+``ops.matmul`` on two sparse operands dispatches there through a
+host-side plan cache.
+
 One-shot convenience (plan + fill), format conversions, and the
 Matlab-compat facade (``fsparse``/``sparse2``/``find``/``nnz_of``)
 ride on top.  Backend selection everywhere is the single ``method=``
@@ -56,6 +63,7 @@ from .matlab import (
     find,
     fsparse,
     fsparse_coo,
+    mtimes,
     nnz_of,
     plan_cache_clear,
     plan_cache_info,
@@ -67,6 +75,14 @@ from .pattern import (
     pattern_from_perm,
     plan,
     plan_coo,
+    trivial_pattern,
+)
+from .spgemm import (
+    ProductPattern,
+    cached_product_plan,
+    product_cache_clear,
+    product_cache_info,
+    product_plan,
 )
 from . import ops
 from .sharded import (
@@ -88,11 +104,13 @@ __all__ = [
     "COO",
     "CSC",
     "CSR",
+    "ProductPattern",
     "ShardedCSC",
     "ShardedPattern",
     "SparseMatrix",
     "SparsePattern",
     "assemble",
+    "cached_product_plan",
     "available_methods",
     "convert",
     "coo_from_matlab",
@@ -102,6 +120,7 @@ __all__ = [
     "fsparse",
     "fsparse_coo",
     "method_from_fused",
+    "mtimes",
     "nnz_of",
     "ops",
     "pattern_from_perm",
@@ -111,6 +130,9 @@ __all__ = [
     "plan_coo",
     "plan_sharded",
     "plan_sharded_coo",
+    "product_cache_clear",
+    "product_cache_info",
+    "product_plan",
     "register_converter",
     "register_format",
     "register_method",
@@ -119,4 +141,5 @@ __all__ = [
     "sparse2",
     "spmv",
     "spmv_t",
+    "trivial_pattern",
 ]

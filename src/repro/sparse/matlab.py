@@ -11,6 +11,9 @@ all implemented on :func:`repro.sparse.plan` + ``SparsePattern``:
       ``sparse2`` spirit: same contract as ``sparse``, faster)
   find(S)                                          (i, j, v) unit-offset
   nnz_of(S)                                        python-int nnz
+  mtimes(A, B)                                     Matlab ``A * B`` —
+      sparse x dense spmv/spmm, or sparse x sparse via the plan-cached
+      two-phase SpGEMM subsystem (:mod:`repro.sparse.spgemm`)
 """
 from __future__ import annotations
 
@@ -251,6 +254,27 @@ def find(S: CSC):
     rows = np.asarray(S.indices)[:nnz]
     vals = np.asarray(S.data)[:nnz]
     return rows + 1, cols + 1, vals
+
+
+def mtimes(A, B):
+    """Matlab ``A * B`` on sparse operands.
+
+    A dense ``B`` runs spmv/spmm; a sparse ``B`` (any registered
+    format) runs the two-phase SpGEMM path — the symbolic product plan
+    is cached across calls keyed on both structures (like the
+    ``sparse2`` plan cache), so Matlab-style repeated products such as
+    the multigrid Galerkin triple product ``P' * A * P`` pay only the
+    O(flops) numeric refill after the first call.
+
+    >>> import numpy as np
+    >>> A = fsparse([1, 2], [1, 2], [2.0, 3.0])      # diag(2, 3)
+    >>> np.asarray(mtimes(A, A).to_dense())
+    array([[4., 0.],
+           [0., 9.]], dtype=float32)
+    """
+    from .ops import matmul
+
+    return matmul(A, B)
 
 
 def nnz_of(S) -> int:

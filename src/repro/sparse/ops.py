@@ -29,6 +29,14 @@ already sparse.
            [2., 3.]], dtype=float32)
     >>> np.asarray(ops.matmul(A, jnp.ones(2, jnp.float32)))
     array([5., 5.], dtype=float32)
+
+    A *sparse* second operand dispatches to the two-phase SpGEMM
+    subsystem (:mod:`repro.sparse.spgemm`) — symbolic product plan
+    cached across calls, O(flops) numeric refill:
+
+    >>> np.asarray(ops.to_dense(ops.matmul(A, A)))
+    array([[25.,  0.],
+           [16.,  9.]], dtype=float32)
     >>> np.asarray(ops.diagonal(A))
     array([5., 3.], dtype=float32)
 
@@ -69,6 +77,7 @@ import jax.numpy as jnp
 from ..core.coo import COO
 from ..core.csc import CSC, slot_columns, spmv as _csc_spmv
 from .formats import CSR, convert, format_of
+from .pattern import fill_dtype
 
 __all__ = [
     "add",
@@ -140,14 +149,43 @@ def _sharded_spmv(A, x: jax.Array) -> jax.Array:
     return A.spmv(x)
 
 
-def matmul(A, x: jax.Array) -> jax.Array:
-    """``A @ x`` (spmv) or ``A @ X`` (spmm, trailing column axis).
+def _spgemm(A, B) -> CSC:
+    """Sparse x sparse product through the two-phase SpGEMM subsystem.
 
-    Dispatched per registered format; the CSC path carries the sparse
-    ``custom_vjp`` (backward for ``x`` is :func:`repro.core.csc.spmv_t`,
-    backward for ``A.data`` a structure gather), so ``jax.grad`` through
-    ``matmul(pat.assemble(vals), x)`` never builds a dense intermediate.
+    Both operands are converted to the CSC hub; the symbolic phase
+    (:func:`repro.sparse.spgemm.product_plan`) is served from a
+    host-side LRU keyed on both structures — the ``sparse2`` spirit —
+    so repeated products with fixed sparsity (multigrid Galerkin
+    operators, normal equations) pay only the O(flops) numeric refill.
     """
+    from .spgemm import cached_product_plan
+
+    Ac = convert(A, "csc")
+    Bc = convert(B, "csc")
+    return cached_product_plan(Ac, Bc).multiply(Ac.data, Bc.data)
+
+
+def matmul(A, x) -> "jax.Array | CSC":
+    """``A @ x`` (spmv), ``A @ X`` (spmm), or sparse ``A @ B`` (SpGEMM).
+
+    Dense operands dispatch per registered format; the CSC path carries
+    the sparse ``custom_vjp`` (backward for ``x`` is
+    :func:`repro.core.csc.spmv_t`, backward for ``A.data`` a structure
+    gather), so ``jax.grad`` through ``matmul(pat.assemble(vals), x)``
+    never builds a dense intermediate.  A *sparse* second operand takes
+    the two-phase SpGEMM path instead (plan-cached symbolic product +
+    O(flops) refill — see :mod:`repro.sparse.spgemm`) and returns a
+    padded :class:`CSC`, differentiable w.r.t. both operands' data.
+    """
+    try:
+        fmt = format_of(x)
+    except TypeError:
+        fmt = None  # not a registered sparse format: dense spmv/spmm
+    if fmt is not None:
+        # outside the try: a TypeError raised *inside* the SpGEMM path
+        # (e.g. no conversion path for A) must surface, not fall
+        # through to the dense path with a misleading error
+        return _spgemm(A, x)
     x = jnp.asarray(x)
     fn, A = _dispatch("spmv", A, hub="csc")
     if x.ndim == 1:
@@ -199,12 +237,16 @@ def add(A, B):
 
     Concatenates the COO triplet streams and reassembles into ``A``'s
     format — one plan over L_A + L_B triplets; overlapping structure
-    merges by the duplicate-summing rule of assembly.
+    merges by the duplicate-summing rule of assembly.  The re-plan's
+    fill follows the shared :func:`~repro.sparse.pattern.fill_dtype`
+    contract: integer operands promote once to f32 (a fill never emits
+    an int-typed matrix) and 16-bit floats keep their dtype while
+    accumulating duplicates in f32.
     """
     if tuple(A.shape) != tuple(B.shape):
         raise ValueError(f"shape mismatch: {A.shape} vs {B.shape}")
     ca, cb = convert(A, "coo"), convert(B, "coo")
-    dtype = jnp.promote_types(ca.vals.dtype, cb.vals.dtype)
+    dtype = fill_dtype(jnp.promote_types(ca.vals.dtype, cb.vals.dtype))
     out = COO(
         rows=jnp.concatenate([ca.rows, cb.rows]),
         cols=jnp.concatenate([ca.cols, cb.cols]),

@@ -203,18 +203,37 @@ class SparsePattern:
         return _scatter_vjp(self.nzmax, accum, self.perm, self.slot, mat)
 
 
-def fill_dtype(vals: jax.Array) -> jnp.dtype:
+def fill_dtype(vals) -> jnp.dtype:
     """Numeric-phase value dtype contract.
 
     Complex/float dtypes pass through bit-exact (Matlab sparse is
     double or complex); integer values are promoted once to f32, not
     silently truncated.  The single home of this rule —
     :meth:`SparsePattern.scatter`, the kernel fills
-    (``repro.kernels.assembly_ops`` / ``segment_sum``) and the sharded
-    value routing all resolve through here so the paths cannot drift.
+    (``repro.kernels.assembly_ops`` / ``segment_sum``), the sharded
+    value routing and the operator re-plans (``repro.sparse.ops.add``)
+    all resolve through here so the paths cannot drift.  Accepts an
+    array or a dtype-like.
     """
-    return vals.dtype if jnp.issubdtype(vals.dtype, jnp.inexact) \
-        else jnp.float32
+    dtype = jnp.dtype(getattr(vals, "dtype", vals))
+    return dtype if jnp.issubdtype(dtype, jnp.inexact) else jnp.float32
+
+
+def accum_dtype(dtype) -> jnp.dtype:
+    """Duplicate-accumulator dtype for a value dtype.
+
+    A bf16/f16 running sum saturates once the total passes ~256 (1 +
+    256 == 256 in bf16), whether the sum is a global cumsum (the kernel
+    fills) or a per-slot scatter-add chain (the jnp fills) — so 16-bit
+    floats accumulate in f32 everywhere and the O(nzmax) totals are
+    cast back to the value dtype.  Single-homed here next to
+    :func:`fill_dtype` so the jnp scatter path and the Pallas kernels
+    (``repro.kernels.segment_sum``) cannot drift apart.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dtype
 
 
 def first_flags(slot: jax.Array, nzmax: int) -> jax.Array:
@@ -291,8 +310,14 @@ def _scatter_reduce(nzmax: int, accum: str, perm, slot, vals):
     """
     v = vals[perm]
     out_shape = (nzmax,) + v.shape[1:]
+    acc = accum_dtype(v.dtype)  # 16-bit floats accumulate in f32
     if accum == "sum":
-        return jnp.zeros(out_shape, v.dtype).at[slot].add(v, mode="drop")
+        return (
+            jnp.zeros(out_shape, acc)
+            .at[slot]
+            .add(v.astype(acc), mode="drop")
+            .astype(v.dtype)
+        )
     if accum in ("min", "max"):
         ident = accum_identity(accum, v.dtype)
         ref = jnp.full(out_shape, ident, v.dtype).at[slot]
@@ -301,9 +326,11 @@ def _scatter_reduce(nzmax: int, accum: str, perm, slot, vals):
         occupied = _bcast(_slot_counts(nzmax, slot) > 0, red.ndim)
         return jnp.where(occupied, red, jnp.zeros((), v.dtype))
     if accum == "mean":
-        s = jnp.zeros(out_shape, v.dtype).at[slot].add(v, mode="drop")
-        n = jnp.maximum(_slot_counts(nzmax, slot), 1).astype(v.dtype)
-        return s / _bcast(n, s.ndim)
+        s = jnp.zeros(out_shape, acc).at[slot].add(
+            v.astype(acc), mode="drop"
+        )
+        n = jnp.maximum(_slot_counts(nzmax, slot), 1).astype(acc)
+        return (s / _bcast(n, s.ndim)).astype(v.dtype)
     if accum == "first":
         keep = first_flags(slot, nzmax)
     else:  # "last"
@@ -431,6 +458,32 @@ def pattern_from_perm(
     )
 
 
+def trivial_pattern(
+    L: int, shape: tuple[int, int], *, nzmax: int | None = None,
+    accum: str = "sum",
+) -> SparsePattern:
+    """All-zero (Matlab empty-matrix) plan: every input is padding.
+
+    The valid zero-entry structure — ``indptr = zeros(N+1)``, ``nnz =
+    0``, ``indices`` all sentinel — that ``fsparse([], [], [], m, n)``
+    and degenerate ``M == 0`` / ``N == 0`` shapes must produce.  Built
+    directly instead of running a sort backend: an empty stream has
+    nothing to sort, and the Pallas planners' digit-pass cost model /
+    grid shapes assume at least one real element.
+    """
+    M, N = int(shape[0]), int(shape[1])
+    nzmax = L if nzmax is None else nzmax
+    return SparsePattern(
+        perm=jnp.arange(L, dtype=jnp.int32),
+        slot=jnp.full((L,), nzmax, jnp.int32),
+        indices=jnp.full((nzmax,), M, jnp.int32),
+        indptr=jnp.zeros((N + 1,), jnp.int32),
+        nnz=jnp.zeros((), jnp.int32),
+        shape=(M, N),
+        accum=accum,
+    )
+
+
 @partial(jax.jit, static_argnames=("shape", "nzmax", "method", "accum"))
 def plan(
     rows: jax.Array,
@@ -458,6 +511,11 @@ def plan(
     L = rows.shape[0]
     nzmax = L if nzmax is None else nzmax
     validate_accum(accum)
+    if L == 0 or M == 0 or N == 0:
+        # Matlab empty-matrix semantics: no entry can be structural
+        # (an L == 0 stream has none; a zero-dim shape makes every
+        # index a sentinel), so skip the sort backends entirely
+        return trivial_pattern(L, (M, N), nzmax=nzmax, accum=accum)
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     perm = sorted_permutation(rows, cols, M=M, N=N, method=method)

@@ -192,6 +192,51 @@ def test_assemble_pallas_vs_oracle(L, M, N):
 
 
 # ---------------------------------------------------------------------------
+# fused two-gather-multiply segment sum (the SpGEMM numeric fast path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_gather2_segment_sum_matches_ref(dtype):
+    from repro.kernels import gather2_segment_sum_sorted
+    from repro.kernels.segment_sum.ref import (
+        gather2_segment_sum_sorted_ref,
+    )
+
+    rng = np.random.default_rng(17)
+    La, Lb, flops, nseg = 40, 30, 600, 64
+    va = jnp.asarray(rng.integers(-2, 3, La), jnp.dtype(dtype))
+    vb = jnp.asarray(rng.integers(-2, 3, Lb), jnp.dtype(dtype))
+    sa = jnp.asarray(rng.integers(0, La, flops), jnp.int32)
+    sb = jnp.asarray(rng.integers(0, Lb, flops), jnp.int32)
+    # sorted-stream slots, ~9 elements per segment (totals stay small
+    # integers, exactly representable in bf16), padding tail last
+    slot_np = np.sort(np.arange(flops) % nseg).astype(np.int32)
+    slot_np[-40:] = nseg  # dropped (capacity-padding) entries
+    slot = jnp.asarray(slot_np)
+    got = gather2_segment_sum_sorted(
+        va, vb, sa, sb, slot, num_segments=nseg, block_b=256
+    )
+    ref = gather2_segment_sum_sorted_ref(
+        va.astype(jnp.float32), vb.astype(jnp.float32), sa, sb, slot,
+        num_segments=nseg,
+    )
+    assert got.dtype == jnp.dtype(dtype)
+    # small-integer products: exact in f32 accumulation for both dtypes
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float64), np.asarray(ref, np.float64))
+
+
+def test_gather2_segment_sum_empty_stream():
+    from repro.kernels import gather2_segment_sum_sorted
+
+    out = gather2_segment_sum_sorted(
+        jnp.ones(4), jnp.ones(3),
+        jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+        jnp.zeros(0, jnp.int32), num_segments=5,
+    )
+    assert out.shape == (5,) and not np.any(np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
 # fused gather + masked segment sum (the numeric-phase fast path)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("L,M,N", [(500, 40, 30), (3000, 64, 64)])

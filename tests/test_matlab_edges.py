@@ -1,0 +1,241 @@
+"""Matlab edge-case sweep: empty matrices, the fill-dtype contract in
+``ops.add``, and sentinel round-trips of ``transpose``/``diagonal``
+(ISSUE 5 satellites).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.coo import COO
+from repro.sparse import (
+    available_methods,
+    convert,
+    find,
+    fsparse,
+    nnz_of,
+    ops,
+    plan,
+    sparse2,
+)
+from repro.sparse.formats import FORMATS
+
+
+# ---------------------------------------------------------------------------
+# Empty-matrix Matlab semantics (L == 0 and zero-dim shapes)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", available_methods())
+def test_plan_empty_stream_every_method(method):
+    """``plan`` with L == 0 must produce the valid all-zero pattern —
+    ``indptr = zeros(N+1)``, ``nnz = 0`` — for every backend, without
+    running a sort over nothing."""
+    pat = plan(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), (3, 4),
+               method=method)
+    assert pat.L == 0 and pat.nzmax == 0
+    np.testing.assert_array_equal(np.asarray(pat.indptr),
+                                  np.zeros(5, np.int32))
+    assert int(pat.nnz) == 0
+    A = pat.assemble(jnp.zeros(0, jnp.float32))
+    assert A.shape == (3, 4)
+    np.testing.assert_array_equal(np.asarray(A.to_dense()),
+                                  np.zeros((3, 4), np.float32))
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_plan_empty_with_capacity_every_method(method):
+    """nzmax > 0 with an empty stream: padded tail only, all sentinel."""
+    pat = plan(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), (3, 4),
+               nzmax=6, method=method)
+    assert pat.nzmax == 6 and int(pat.nnz) == 0
+    np.testing.assert_array_equal(np.asarray(pat.indices),
+                                  np.full(6, 3, np.int32))
+
+
+@pytest.mark.parametrize("method", available_methods())
+@pytest.mark.parametrize("shape", [(0, 4), (3, 0), (0, 0)])
+def test_plan_zero_dim_shapes_every_method(shape, method):
+    """M == 0 / N == 0: every input is out of range, so the pattern is
+    all-padding (nnz = 0) rather than an error or a degenerate grid."""
+    L = 3
+    pat = plan(jnp.zeros(L, jnp.int32), jnp.zeros(L, jnp.int32), shape,
+               method=method)
+    assert int(pat.nnz) == 0
+    assert np.all(np.asarray(pat.slot) == pat.nzmax)  # all dropped
+    A = pat.assemble(jnp.ones(L, jnp.float32))
+    assert A.shape == shape
+    assert np.asarray(A.to_dense()).shape == shape
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_fsparse_empty_every_method(method):
+    S = fsparse([], [], [], (3, 4), method=method)
+    assert S.shape == (3, 4) and nnz_of(S) == 0
+    i, j, v = find(S)
+    assert i.size == j.size == v.size == 0
+    np.testing.assert_array_equal(np.asarray(S.to_dense()),
+                                  np.zeros((3, 4), np.float32))
+
+
+def test_sparse2_empty_cached():
+    S1 = sparse2([], [], [], (2, 2))
+    S2 = sparse2([], [], [], (2, 2))
+    assert nnz_of(S1) == nnz_of(S2) == 0
+
+
+def test_empty_kernel_fills():
+    """The kernel fills must accept an L == 0 pattern (the unfused
+    reduce's segment-boundary gathers assumed L >= 1)."""
+    from repro.kernels.assembly_ops import fill_fused, fill_pallas
+
+    pat = plan(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), (3, 4),
+               nzmax=5)
+    for fill in (fill_fused, fill_pallas):
+        out = fill(pat, jnp.zeros(0, jnp.float32))
+        assert out.data.shape == (5,)
+        assert not np.any(np.asarray(out.data))
+        assert int(out.nnz) == 0
+
+
+def test_plan_pallas_empty_stream():
+    """The kernel-backed planner takes the same trivial-pattern exit:
+    no radix passes over an empty stream, valid all-zero structure."""
+    from repro.kernels.assembly_ops import plan_pallas
+
+    pat = plan_pallas(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+                      M=3, N=4, nzmax=5)
+    assert int(pat.nnz) == 0 and pat.nzmax == 5
+    np.testing.assert_array_equal(np.asarray(pat.indptr),
+                                  np.zeros(5, np.int32))
+
+
+def test_empty_matrix_ops():
+    S = fsparse([], [], [], (3, 4))
+    assert np.asarray(ops.matmul(S, jnp.ones(4))).tolist() == [0, 0, 0]
+    assert np.asarray(ops.diagonal(S)).tolist() == [0, 0, 0]
+    T = ops.transpose(S)
+    assert T.shape == (4, 3)
+
+
+# ---------------------------------------------------------------------------
+# ops.add fill-dtype contract
+# ---------------------------------------------------------------------------
+def test_add_int_operands_promote_to_f32():
+    """int32 + int32 must produce an inexact (f32) result in every
+    format — no fill kernel ever emits an int-typed matrix."""
+    A = COO(rows=jnp.array([0, 1], jnp.int32),
+            cols=jnp.array([0, 0], jnp.int32),
+            vals=jnp.array([1, 2], jnp.int32), shape=(2, 2))
+    C = ops.add(A, A)  # COO output keeps A's format
+    assert C.vals.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(C.to_dense()),
+        np.array([[2, 0], [4, 0]], np.float32))
+    Ac = convert(A, "csc")
+    Cc = ops.add(Ac, Ac)
+    assert Cc.data.dtype == jnp.float32
+
+
+def test_add_bf16_duplicates_accumulate_in_f32():
+    """bf16 + bf16 keeps bf16 storage but must not saturate duplicate
+    accumulation at ~256 (the shared accum_dtype rule)."""
+    L = 512
+    pat = plan(np.zeros(L, np.int32), np.zeros(L, np.int32), (1, 1))
+    A = pat.assemble(jnp.ones(L, jnp.bfloat16))
+    assert A.data.dtype == jnp.bfloat16
+    assert float(A.data[0]) == float(L)  # 256 if accumulated in bf16
+    C = ops.add(A, A)
+    assert C.data.dtype == jnp.bfloat16
+    assert float(C.data[0]) == float(2 * L)
+
+
+def test_scatter_bf16_long_duplicate_chain_exact():
+    """Regression for the jnp scatter path itself: a 1024-long
+    duplicate chain of bf16 ones must sum to 1024, matching the kernel
+    fills' f32 accumulation."""
+    from repro.kernels.assembly_ops import fill_fused
+
+    L = 1024
+    pat = plan(np.zeros(L, np.int32), np.zeros(L, np.int32), (1, 1))
+    v = jnp.ones(L, jnp.bfloat16)
+    got = pat.scatter(v)
+    assert got.dtype == jnp.bfloat16
+    assert float(got[0]) == 1024.0
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float64),
+        np.asarray(fill_fused(pat, v).data, np.float64))
+
+
+def test_add_mixed_dtype_promotes_once():
+    A = fsparse([1], [1], [1.5], (1, 1))
+    B = COO(rows=jnp.zeros(1, jnp.int32), cols=jnp.zeros(1, jnp.int32),
+            vals=jnp.array([2], jnp.int32), shape=(1, 1))
+    C = ops.add(A, B)
+    assert C.data.dtype == jnp.float32
+    assert float(C.data[0]) == 3.5
+
+
+# ---------------------------------------------------------------------------
+# transpose / diagonal sentinel round-trips
+# ---------------------------------------------------------------------------
+def _rect_matrix():
+    # rectangular (3, 5) with a duplicate and an untouched column
+    return fsparse([1, 3, 3, 2], [1, 4, 4, 5], [1.0, 2.0, 3.0, 4.0],
+                   (3, 5))
+
+
+def _padded_matrix():
+    # fully padded: nnz == 0 but nzmax == 4 (all inputs are sentinels)
+    pat = plan(jnp.full(4, 3, jnp.int32), jnp.zeros(4, jnp.int32),
+               (3, 5), nzmax=4)
+    return pat.assemble(jnp.ones(4, jnp.float32))
+
+
+def _formats_under_test():
+    # block-partitioned sharded is covered separately (its transpose
+    # legitimately changes format through the COO hub)
+    return [f for f in sorted(FORMATS) if f != "sharded"]
+
+
+@pytest.mark.parametrize("fmt", _formats_under_test())
+@pytest.mark.parametrize("make", [_rect_matrix, _padded_matrix],
+                         ids=["rect", "padded"])
+def test_transpose_round_trip_bit_identical(fmt, make):
+    A = convert(make(), fmt)
+    T = ops.transpose(A)
+    assert tuple(T.shape) == (A.shape[1], A.shape[0])
+    np.testing.assert_array_equal(np.asarray(ops.to_dense(T)),
+                                  np.asarray(ops.to_dense(A)).T)
+    R = ops.transpose(T)
+    assert type(R) is type(A) and tuple(R.shape) == tuple(A.shape)
+    for field in ("data", "vals", "indices", "indptr", "rows", "cols"):
+        if hasattr(A, field):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(A, field)),
+                np.asarray(getattr(R, field)),
+                err_msg=f"{fmt}.{field} changed across "
+                        "transpose(transpose(A))",
+            )
+
+
+@pytest.mark.parametrize("fmt", _formats_under_test())
+@pytest.mark.parametrize("make", [_rect_matrix, _padded_matrix],
+                         ids=["rect", "padded"])
+def test_diagonal_rectangular_and_padded(fmt, make):
+    A = convert(make(), fmt)
+    d = ops.diagonal(A)
+    k = min(A.shape)
+    assert d.shape == (k,)
+    dense = np.asarray(ops.to_dense(A))
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.diag(dense)[:k])
+
+
+def test_transpose_diagonal_sharded_via_hub():
+    """ShardedCSC: transpose/diagonal route through the COO hub; the
+    dense views must agree even though the format changes."""
+    A = convert(_rect_matrix(), "sharded")
+    dense = np.asarray(ops.to_dense(A))
+    T = ops.transpose(A)
+    np.testing.assert_array_equal(np.asarray(ops.to_dense(T)), dense.T)
+    np.testing.assert_array_equal(
+        np.asarray(ops.diagonal(A)), np.diag(dense)[: min(A.shape)])

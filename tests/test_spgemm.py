@@ -1,0 +1,394 @@
+"""Two-phase SpGEMM: symbolic product patterns + O(flops) refill.
+
+Covers the ISSUE-5 acceptance criteria: scipy-oracle bit-identity on
+Table 4.2-derived operands for every registered method, refill
+correctness after value changes, gradients w.r.t. both operands vs the
+dense oracle, the fused kernel path, the ops/matlab dispatch + product
+cache, and degenerate shapes (rectangular, empty, capacity padding).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ransparse import dataset
+from repro.sparse import (
+    available_methods,
+    convert,
+    fsparse,
+    mtimes,
+    ops,
+    plan,
+    product_cache_clear,
+    product_cache_info,
+    product_plan,
+    cached_product_plan,
+)
+
+sp = pytest.importorskip("scipy.sparse")
+
+
+def _rand_pair(M, K, N, La, Lb, seed=0):
+    rng = np.random.default_rng(seed)
+    a = (rng.integers(0, M, La).astype(np.int32),
+         rng.integers(0, K, La).astype(np.int32),
+         rng.standard_normal(La).astype(np.float32))
+    b = (rng.integers(0, K, Lb).astype(np.int32),
+         rng.integers(0, N, Lb).astype(np.int32),
+         rng.standard_normal(Lb).astype(np.float32))
+    return a, b
+
+
+def _dense_from_data(pat, data):
+    """Dense matrix from a *stored-order* (slot) data vector — the
+    differentiable dense oracle aligned with ``multiply``'s operands."""
+    from repro.core.csc import csc_to_dense
+
+    return csc_to_dense(data, pat.indices, pat.indptr,
+                        M=pat.M, N=pat.N)
+
+
+def _scipy_dense(r, c, v, shape):
+    return np.asarray(
+        sp.coo_matrix((v, (r, c)), shape=shape).tocsc().toarray(),
+        np.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Oracle identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", available_methods())
+def test_product_matches_scipy_table42(method):
+    """Bit-for-bit vs scipy on a Table 4.2-derived operand pair: the
+    all-ones values make every partial product and sum an exact small
+    integer in f32, so the comparison is exact equality."""
+    ii, jj, ss, siz = dataset(1, seed=42, scale=0.002)
+    r = (ii - 1).astype(np.int32)
+    c = (jj - 1).astype(np.int32)
+    v = ss.astype(np.float32)
+    pat = plan(r, c, (siz, siz), method=method)
+    A = pat.assemble(jnp.asarray(v))
+    pp = product_plan(pat, pat, method=method)
+    C = pp.multiply(A.data, A.data)
+    Asp = sp.coo_matrix((v, (r, c)), shape=(siz, siz)).tocsc()
+    ref = np.asarray((Asp @ Asp).toarray(), np.float32)
+    np.testing.assert_array_equal(np.asarray(C.to_dense()), ref)
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_product_rectangular_random(method):
+    (ra, ca, va), (rb, cb, vb) = _rand_pair(13, 7, 9, 60, 45, seed=3)
+    pa = plan(ra, ca, (13, 7), method=method)
+    pb = plan(rb, cb, (7, 9), method=method)
+    A = pa.assemble(jnp.asarray(va))
+    B = pb.assemble(jnp.asarray(vb))
+    pp = product_plan(pa, pb, method=method)
+    got = np.asarray(pp.multiply(A.data, B.data).to_dense())
+    ref = _scipy_dense(ra, ca, va, (13, 7)) @ _scipy_dense(
+        rb, cb, vb, (7, 9))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_refill_many_same_pattern():
+    """The §2.3 split: one symbolic phase, many numeric refills with
+    different operand values sharing the structures."""
+    (ra, ca, _), (rb, cb, _) = _rand_pair(8, 6, 7, 40, 30, seed=1)
+    pa = plan(ra, ca, (8, 6))
+    pb = plan(rb, cb, (6, 7))
+    pp = product_plan(pa, pb)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        va = rng.standard_normal(40).astype(np.float32)
+        vb = rng.standard_normal(30).astype(np.float32)
+        A = pa.assemble(jnp.asarray(va))
+        B = pb.assemble(jnp.asarray(vb))
+        got = np.asarray(pp.multiply(A.data, B.data).to_dense())
+        ref = _scipy_dense(ra, ca, va, (8, 6)) @ _scipy_dense(
+            rb, cb, vb, (6, 7))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_product_accepts_csc_operands():
+    """product_plan takes CSC matrices as structure carriers too."""
+    (ra, ca, va), (rb, cb, vb) = _rand_pair(6, 5, 4, 25, 20, seed=9)
+    A = plan(ra, ca, (6, 5)).assemble(jnp.asarray(va))
+    B = plan(rb, cb, (5, 4)).assemble(jnp.asarray(vb))
+    pp = product_plan(A, B)
+    got = np.asarray(pp.multiply(A.data, B.data).to_dense())
+    ref = _scipy_dense(ra, ca, va, (6, 5)) @ _scipy_dense(
+        rb, cb, vb, (5, 4))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_product_rejects_row_compressed_operands():
+    """A CSR operand (rectangular OR square, where the indptr length
+    cannot discriminate) must be rejected, not silently interpreted as
+    column-compressed — that computed the product of the transpose."""
+    A = fsparse([1, 1, 2], [1, 2, 2], [1.0, 2.0, 3.0], (2, 2))
+    R = convert(A, "csr")
+    with pytest.raises(TypeError, match="column-compressed"):
+        product_plan(R, A)
+    with pytest.raises(TypeError, match="column-compressed"):
+        product_plan(A, R)
+    B = fsparse([1, 2], [1, 3], [1.0, 2.0], (2, 3))
+    with pytest.raises(TypeError, match="column-compressed"):
+        product_plan(convert(B, "csr"), fsparse([1], [1], [1.0], (3, 2)))
+
+
+def test_matmul_surfaces_spgemm_type_errors():
+    """A TypeError raised inside the SpGEMM path (unconvertible left
+    operand) must surface, not be swallowed into the dense fallback's
+    misleading error."""
+    B = fsparse([1], [1], [1.0], (2, 2))
+    with pytest.raises(TypeError, match="no conversion path"):
+        ops.matmul(np.eye(2), B)
+
+
+def test_default_nzmax_compacts_to_true_nnz():
+    """C's default capacity is the structural nnz, not the flop count
+    — downstream O(nzmax) consumers must not scan expansion slack."""
+    ii, jj, ss, siz = dataset(1, seed=7, scale=0.002)
+    pat = plan((ii - 1).astype(np.int32), (jj - 1).astype(np.int32),
+               (siz, siz))
+    pp = product_plan(pat, pat)
+    assert pp.nzmax == int(np.asarray(pp.pattern.nnz))
+    assert pp.nzmax < pp.flops  # duplicates collapsed
+    A = pat.assemble(jnp.asarray(ss.astype(np.float32)))
+    C = pp.multiply(A.data, A.data)
+    assert C.data.shape == (pp.nzmax,)
+    Asp = sp.coo_matrix(
+        (ss.astype(np.float32), ((ii - 1), (jj - 1))),
+        shape=(siz, siz)).tocsc()
+    np.testing.assert_array_equal(
+        np.asarray(C.to_dense()),
+        np.asarray((Asp @ Asp).toarray(), np.float32))
+
+
+def test_product_shape_mismatch_raises():
+    pa = plan(np.array([0]), np.array([0]), (2, 3))
+    pb = plan(np.array([0]), np.array([0]), (4, 2))
+    with pytest.raises(ValueError, match="inner dimensions"):
+        product_plan(pa, pb)
+
+
+def test_multiply_validates_capacities():
+    pa = plan(np.array([0, 1]), np.array([0, 1]), (2, 2))
+    pp = product_plan(pa, pa)
+    with pytest.raises(ValueError, match="nzmax"):
+        pp.multiply(jnp.ones(3), jnp.ones(2))
+    with pytest.raises(ValueError, match="nzmax"):
+        pp.multiply(jnp.ones(2), jnp.ones(5))
+
+
+# ---------------------------------------------------------------------------
+# Differentiability
+# ---------------------------------------------------------------------------
+def test_grad_both_operands_vs_dense_oracle():
+    (ra, ca, va), (rb, cb, vb) = _rand_pair(7, 5, 6, 30, 25, seed=0)
+    pa = plan(ra, ca, (7, 5))
+    pb = plan(rb, cb, (5, 6))
+    A = pa.assemble(jnp.asarray(va))
+    B = pb.assemble(jnp.asarray(vb))
+    pp = product_plan(pa, pb)
+
+    def loss(da, db):
+        return (pp.multiply(da, db).data ** 2).sum()
+
+    def loss_dense(da, db):
+        # dense matrices from the *stored* data vectors (slot order),
+        # so the gradients line up with multiply's operands; sum over C
+        # cells of value^2 == sum over slots of data^2 (each structural
+        # cell occupies exactly one slot; the padded tail holds zeros)
+        Ad = _dense_from_data(pa, da)
+        Bd = _dense_from_data(pb, db)
+        return ((Ad @ Bd) ** 2).sum()
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(A.data, B.data)
+    ga_d, gb_d = jax.grad(loss_dense, argnums=(0, 1))(A.data, B.data)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_multiply_composes_with_jit_and_spmv_grad():
+    """The product output is a first-class CSC: grad flows through
+    multiply -> spmv inside jit."""
+    (ra, ca, va), (rb, cb, vb) = _rand_pair(5, 4, 5, 20, 18, seed=5)
+    pa = plan(ra, ca, (5, 4))
+    pb = plan(rb, cb, (4, 5))
+    A = pa.assemble(jnp.asarray(va))
+    B = pb.assemble(jnp.asarray(vb))
+    pp = product_plan(pa, pb)
+    x = jnp.arange(1.0, 6.0)
+
+    @jax.jit
+    def loss(da, db):
+        return ops.matmul(pp.multiply(da, db), x).sum()
+
+    def loss_dense(da, db):
+        return (_dense_from_data(pa, da)
+                @ _dense_from_data(pb, db) @ x).sum()
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(A.data, B.data)
+    ga_d, gb_d = jax.grad(loss_dense, argnums=(0, 1))(A.data, B.data)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel path
+# ---------------------------------------------------------------------------
+def test_multiply_fused_matches_jnp_path():
+    from repro.kernels.assembly_ops import multiply_fused
+
+    ii, jj, ss, siz = dataset(3, seed=11, scale=0.002)
+    r = (ii - 1).astype(np.int32)
+    c = (jj - 1).astype(np.int32)
+    pat = plan(r, c, (siz, siz))
+    A = pat.assemble(jnp.asarray(ss.astype(np.float32)))
+    pp = product_plan(pat, pat)
+    ref = pp.multiply(A.data, A.data)
+    got = multiply_fused(pp, A.data, A.data)
+    # all-ones operands: exact integer sums in both reduce orders
+    np.testing.assert_array_equal(np.asarray(got.data),
+                                  np.asarray(ref.data))
+    assert got.data.dtype == ref.data.dtype
+
+
+def test_multiply_fused_residency_fallback(monkeypatch):
+    from repro.kernels.assembly_ops import multiply_fused
+    from repro.kernels.segment_sum import ops as ss_ops
+
+    (ra, ca, va), (rb, cb, vb) = _rand_pair(9, 8, 7, 50, 40, seed=2)
+    pa = plan(ra, ca, (9, 8))
+    pb = plan(rb, cb, (8, 7))
+    A = pa.assemble(jnp.asarray(va))
+    B = pb.assemble(jnp.asarray(vb))
+    pp = product_plan(pa, pb)
+    ref = np.asarray(pp.multiply(A.data, B.data).data)
+    monkeypatch.setattr(ss_ops, "FUSED_RESIDENT_MAX_BYTES", 16)
+    ss_ops.gather2_segment_sum_sorted.clear_cache()
+    got = np.asarray(multiply_fused(pp, A.data, B.data).data)
+    ss_ops.gather2_segment_sum_sorted.clear_cache()
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Capacity padding + degenerate shapes
+# ---------------------------------------------------------------------------
+def test_flops_max_padding_and_overflow():
+    pa = plan(np.array([0, 1]), np.array([0, 1]), (2, 2))
+    pp_exact = product_plan(pa, pa)
+    pp_pad = product_plan(pa, pa, flops_max=pp_exact.flops + 5)
+    assert pp_pad.flops == pp_exact.flops + 5
+    d = jnp.array([2.0, 3.0])
+    np.testing.assert_array_equal(
+        np.asarray(pp_pad.multiply(d, d).to_dense()),
+        np.asarray(pp_exact.multiply(d, d).to_dense()),
+    )
+    with pytest.raises(ValueError, match="flops_max"):
+        product_plan(pa, pa, flops_max=pp_exact.flops - 1)
+
+
+def test_empty_operand_product():
+    pa = plan(np.array([0, 1]), np.array([0, 1]), (2, 3))
+    pb = plan(np.zeros(0, np.int32), np.zeros(0, np.int32), (3, 4))
+    pp = product_plan(pa, pb)
+    assert pp.flops == 0
+    C = pp.multiply(jnp.ones(2), jnp.zeros(0))
+    assert int(C.nnz) == 0
+    np.testing.assert_array_equal(np.asarray(C.to_dense()),
+                                  np.zeros((2, 4), np.float32))
+
+
+def test_zero_dim_product():
+    pa = plan(np.zeros(0, np.int32), np.zeros(0, np.int32), (0, 3))
+    pb = plan(np.array([0, 2]), np.array([0, 1]), (3, 2))
+    pp = product_plan(pa, pb)
+    C = pp.multiply(jnp.zeros(0), jnp.ones(2))
+    assert C.shape == (0, 2) and int(C.nnz) == 0
+
+
+# ---------------------------------------------------------------------------
+# ops / matlab dispatch + product cache
+# ---------------------------------------------------------------------------
+def test_ops_matmul_sparse_dispatch_and_cache():
+    product_cache_clear()
+    A = fsparse([1, 2, 2], [1, 1, 2], [1.0, 2.0, 3.0], (2, 2))
+    C1 = ops.matmul(A, A)
+    assert product_cache_info()["size"] == 1
+    C2 = ops.matmul(A, A)  # same structures: symbolic phase skipped
+    assert product_cache_info()["size"] == 1
+    np.testing.assert_array_equal(np.asarray(C1.to_dense()),
+                                  np.asarray(C2.to_dense()))
+    ref = np.asarray(A.to_dense()) @ np.asarray(A.to_dense())
+    np.testing.assert_allclose(np.asarray(C1.to_dense()), ref,
+                               rtol=1e-6)
+
+
+def test_ops_matmul_mixed_formats():
+    """CSR x CSC routes both through the CSC hub before the product."""
+    A = fsparse([1, 1, 2], [1, 2, 2], [1.0, 2.0, 3.0], (2, 2))
+    Acsr = convert(A, "csr")
+    C = ops.matmul(Acsr, A)
+    ref = np.asarray(A.to_dense()) @ np.asarray(A.to_dense())
+    np.testing.assert_allclose(np.asarray(C.to_dense()), ref, rtol=1e-6)
+
+
+def test_mtimes_and_dunder_matmul():
+    A = fsparse([1, 2], [1, 2], [2.0, 3.0])
+    np.testing.assert_array_equal(
+        np.asarray(mtimes(A, A).to_dense()),
+        np.diag([4.0, 9.0]).astype(np.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray((A @ A).to_dense()),
+        np.diag([4.0, 9.0]).astype(np.float32),
+    )
+    # dense operand still runs spmv through the same dunder
+    np.testing.assert_array_equal(
+        np.asarray(A @ jnp.ones(2)), np.array([2.0, 3.0], np.float32))
+
+
+def test_matmul_dense_paths_unchanged():
+    A = fsparse([1, 2, 2], [1, 1, 2], [1.0, 2.0, 3.0], (2, 2))
+    y = ops.matmul(A, jnp.ones(2))
+    np.testing.assert_allclose(np.asarray(y), [1.0, 5.0], rtol=1e-6)
+    Y = ops.matmul(A, jnp.eye(2))
+    np.testing.assert_allclose(np.asarray(Y), np.asarray(A.to_dense()),
+                               rtol=1e-6)
+
+
+def test_galerkin_triple_product_refill_speed_structure():
+    """P' A P: both product patterns fixed across refills; values-only
+    changes produce the scaled operator exactly."""
+    n, n_c = 31, 15
+    rows = np.repeat(np.arange(n), 3)[: 3 * n_c]
+    # simple 1-D interpolation structure
+    rp, cp, vp = [], [], []
+    for jc in range(n_c):
+        jf = 2 * jc + 1
+        rp += [jf - 1, jf, jf + 1]
+        cp += [jc, jc, jc]
+        vp += [0.5, 1.0, 0.5]
+    del rows
+    ra = np.concatenate([np.arange(n), np.arange(n - 1), np.arange(1, n)])
+    ca = np.concatenate([np.arange(n), np.arange(1, n), np.arange(n - 1)])
+    va = np.concatenate([np.full(n, 2.0), np.full(n - 1, -1.0),
+                         np.full(n - 1, -1.0)]).astype(np.float32)
+    pat_A = plan(ra.astype(np.int32), ca.astype(np.int32), (n, n))
+    P = plan(np.array(rp, np.int32), np.array(cp, np.int32),
+             (n, n_c)).assemble(jnp.asarray(vp, dtype=jnp.float32))
+    Pt = ops.transpose(P)
+    A1 = pat_A.assemble(jnp.asarray(va))
+    C1 = ops.matmul(ops.matmul(Pt, A1), P)
+    A2 = pat_A.assemble(jnp.asarray(3.0 * va))
+    C2 = ops.matmul(ops.matmul(Pt, A2), P)
+    np.testing.assert_allclose(np.asarray(C2.to_dense()),
+                               3.0 * np.asarray(C1.to_dense()),
+                               rtol=1e-5, atol=1e-5)
