@@ -26,6 +26,9 @@ Mapping to the paper:
                        registered ``method=``
   bench_spgemm         beyond-paper: two-phase SpGEMM — plan-once /
                        refill-many sparse products vs a scipy oracle
+  bench_serving        beyond-paper: PlanService request latency under
+                       concurrent threaded load — cold vs warm (p50/p99)
+                       vs persistent warm-restart
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
   bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
@@ -143,6 +146,7 @@ def main() -> None:
         bench_moe_dispatch,
         bench_parts,
         bench_reassemble,
+        bench_serving,
         bench_shard_reassemble,
         bench_spgemm,
         bench_spmv,
@@ -159,6 +163,7 @@ def main() -> None:
             scale=args.scale
         ),
         "spgemm": lambda: bench_spgemm.run(scale=args.scale),
+        "serving": lambda: bench_serving.run(scale=args.scale),
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),

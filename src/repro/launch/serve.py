@@ -1,19 +1,35 @@
 """Batched serving launcher: continuous-batching decode loop.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --arch qwen3_0_6b --reduced --batch 4 --prompt-len 32 --gen 16
+        --arch qwen3_0_6b --reduced --batch 4 --prompt-len 32 --gen 16 \
+        [--plan-cache-dir /var/cache/repro-plans]
 
 Implements the serving half of the framework: prefill builds the KV /
 SSM caches, then a decode loop greedily samples one token per step for
 the whole batch.  Requests are slotted into the fixed batch (continuous
 batching: a finished row is immediately replaced by the next queued
 prompt; here queue = synthetic prompts).
+
+The process environment is tuned at startup the way the olmax-style
+entrypoint scripts do (XLA flags, tcmalloc thresholds — see
+``repro.sparse.serving.runtime_env``; a tcmalloc LD_PRELOAD hint is
+printed when the library is installed but not loaded).
+``--plan-cache-dir`` turns on the persistent serving layer end to end:
+sparse plans route through a :class:`repro.serve.PlanService` whose
+plan/product entries (and, where the backend supports it, XLA
+executables) live in that directory — a restarted server is warm.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+# runtime env must be tuned before the first jax computation (XLA reads
+# its flags at backend init); importing jax is safe, initializing isn't
+from ..sparse.serving import apply_runtime_env, tcmalloc_hint
+
+_APPLIED_ENV = apply_runtime_env()
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +49,34 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache-dir", default=None, metavar="DIR",
+                    help="persistent plan/executable cache root: plans "
+                         "load on start (warm restart) and new plans are "
+                         "written through")
     args = ap.parse_args(argv)
+
+    if _APPLIED_ENV:
+        print(f"[serve] tuned runtime env: {_APPLIED_ENV}")
+    hint = tcmalloc_hint()
+    if hint:
+        print(f"[serve] hint: relaunch under '{hint}' for a faster malloc")
+
+    service = None
+    if args.plan_cache_dir:
+        from ..serve import PlanService
+
+        service = PlanService(cache_dir=args.plan_cache_dir)
+        print(f"[serve] plan service: {service.loaded_plans} plans + "
+              f"{service.loaded_products} product plans loaded from "
+              f"{args.plan_cache_dir}"
+              + (" (warm restart)" if service.loaded_plans else " (cold)"))
+        # the continuous-batching slot table as a sparse structure (slot
+        # s <- request r), assembled through the service: exercises the
+        # persistent layer end to end — the first launch plans and
+        # persists it, every later launch replays the on-disk plan
+        slots = np.arange(1, args.batch + 1)
+        service.assemble(slots, slots, np.ones(args.batch),
+                         (args.batch, args.batch))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -78,6 +121,8 @@ def main(argv=None):
         total_tokens = args.requests * args.gen
         print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
               f"({total_tokens / dt:.1f} tok/s incl. prefill)")
+    if service is not None:
+        print(f"[serve] plan service stats: {service.stats()}")
     return 0
 
 

@@ -1,10 +1,39 @@
 """repro.serve — serving entry points.
 
-The serving primitives live next to the model definitions
-(`repro.models.model`: ``init_cache`` / ``prefill`` / ``decode_step``);
-this package re-exports them as the public serving API and hosts the
-continuous-batching loop (`repro.launch.serve`).
+Two serving surfaces live here:
+
+* **Model serving** — the primitives next to the model definitions
+  (``repro.models.model``: ``init_cache`` / ``prefill`` /
+  ``decode_step``) plus the continuous-batching loop
+  (``repro.launch.serve``).
+* **Sparse-assembly serving** — the plan service subsystem
+  (:mod:`repro.sparse.serving`): thread-safe plan/product/executable
+  caches, AOT-compiled per-structure fills, request batching and
+  persistent warm restarts.  :class:`PlanService` is the front end; the
+  runtime-environment helpers tune the serving process the way the
+  launcher scripts expect (XLA flags, tcmalloc hint, persistent
+  compilation cache).
 """
 from ..models.model import decode_step, init_cache, prefill
+from ..sparse.serving import (
+    PlanService,
+    apply_runtime_env,
+    enable_compilation_cache,
+    load_caches,
+    runtime_env,
+    save_caches,
+    tcmalloc_hint,
+)
 
-__all__ = ["decode_step", "init_cache", "prefill"]
+__all__ = [
+    "PlanService",
+    "apply_runtime_env",
+    "decode_step",
+    "enable_compilation_cache",
+    "init_cache",
+    "load_caches",
+    "prefill",
+    "runtime_env",
+    "save_caches",
+    "tcmalloc_hint",
+]

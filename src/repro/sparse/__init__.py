@@ -59,6 +59,7 @@ from .formats import (
     register_converter,
     register_format,
 )
+from .lru import LRUCache
 from .matlab import (
     find,
     fsparse,
@@ -67,6 +68,7 @@ from .matlab import (
     nnz_of,
     plan_cache_clear,
     plan_cache_info,
+    plan_lookup,
     sparse2,
 )
 from .pattern import (
@@ -82,9 +84,19 @@ from .spgemm import (
     cached_product_plan,
     product_cache_clear,
     product_cache_info,
+    product_lookup,
     product_plan,
 )
 from . import ops
+from .serving import (
+    PlanService,
+    apply_runtime_env,
+    enable_compilation_cache,
+    load_caches,
+    runtime_env,
+    save_caches,
+    tcmalloc_hint,
+)
 from .sharded import (
     ShardedCSC,
     ShardedPattern,
@@ -104,21 +116,26 @@ __all__ = [
     "COO",
     "CSC",
     "CSR",
+    "LRUCache",
+    "PlanService",
     "ProductPattern",
     "ShardedCSC",
     "ShardedPattern",
     "SparseMatrix",
     "SparsePattern",
+    "apply_runtime_env",
     "assemble",
     "cached_product_plan",
     "available_methods",
     "convert",
     "coo_from_matlab",
     "default_method",
+    "enable_compilation_cache",
     "find",
     "format_of",
     "fsparse",
     "fsparse_coo",
+    "load_caches",
     "method_from_fused",
     "mtimes",
     "nnz_of",
@@ -128,18 +145,23 @@ __all__ = [
     "plan_cache_clear",
     "plan_cache_info",
     "plan_coo",
+    "plan_lookup",
     "plan_sharded",
     "plan_sharded_coo",
     "product_cache_clear",
     "product_cache_info",
+    "product_lookup",
     "product_plan",
     "register_converter",
     "register_format",
     "register_method",
     "resolve_method",
+    "runtime_env",
+    "save_caches",
     "sorted_permutation",
     "sparse2",
     "spmv",
     "spmv_t",
+    "tcmalloc_hint",
     "trivial_pattern",
 ]

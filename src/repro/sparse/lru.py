@@ -1,0 +1,168 @@
+"""Thread-safe, metrics-instrumented LRU — the one cache core.
+
+Every structure-keyed host cache in the repo used to be a hand-rolled
+``OrderedDict`` (the ``sparse2`` plan cache in :mod:`repro.sparse.matlab`
+and the SpGEMM product cache in :mod:`repro.sparse.spgemm`), unlocked
+and therefore unsafe under the concurrent request streams a serving
+process sees: two threads interleaving ``move_to_end`` / ``popitem``
+can corrupt the eviction order or raise mid-iteration.  This module is
+the single locked implementation all of them (plus the serving
+executable tier in :mod:`repro.sparse.serving`) now ride.
+
+Design points:
+
+* **Lock scope.**  The lock covers only the dict operations; the value
+  ``factory`` of :meth:`LRUCache.get_or_create` runs *outside* it, so
+  concurrent misses on different structures plan in parallel (symbolic
+  planning is the expensive part — serializing it would turn the cache
+  into a global bottleneck).  Two threads missing on the *same* key
+  both plan, but the first insert wins and the loser adopts the
+  winner's value — every caller shares one plan object and no entry is
+  ever lost (results are bit-identical either way: plans are
+  value-deterministic functions of the structure).
+* **Metrics.**  ``hits`` / ``misses`` / ``evictions`` / ``insertions``
+  are maintained under the same lock and surfaced by :meth:`info` —
+  eviction pressure is the serving capacity signal.
+* **Capacity.**  Fixed at construction, overridable by an environment
+  variable (``env=``, e.g. ``REPRO_PLAN_CACHE_SIZE``) read at cache
+  creation, and adjustable at runtime with :meth:`resize`.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Hashable, Iterable, Tuple
+
+__all__ = ["LRUCache", "env_capacity"]
+
+
+def env_capacity(var: str | None, default: int) -> int:
+    """Capacity from the environment (``var``), else ``default``.
+
+    A present-but-malformed value raises instead of being silently
+    ignored — a serving deployment that sets the knob wants it applied.
+    """
+    if var is None:
+        return default
+    raw = os.environ.get(var)
+    if raw is None:
+        return default
+    try:
+        cap = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"environment variable {var}={raw!r} is not an integer "
+            "cache capacity"
+        ) from e
+    if cap < 1:
+        raise ValueError(f"{var}={cap} — cache capacity must be >= 1")
+    return cap
+
+
+class LRUCache:
+    """Locked LRU with hit/miss/eviction/insertion counters."""
+
+    def __init__(self, capacity: int, *, name: str = "lru",
+                 env: str | None = None):
+        self.name = name
+        self._capacity = env_capacity(env, capacity)
+        if self._capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self._capacity}")
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._insertions = 0
+
+    # -- core --------------------------------------------------------------
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        """Lookup + recency bump; counts a hit or a miss."""
+        with self._lock:
+            try:
+                val = self._data[key]
+            except KeyError:
+                self._misses += 1
+                return default
+            self._data.move_to_end(key)
+            self._hits += 1
+            return val
+
+    def insert(self, key: Hashable, value: Any) -> Any:
+        """Insert (or adopt an existing entry) and evict past capacity.
+
+        Returns the cached value for ``key`` — the existing one if
+        another thread inserted first (first insert wins; see module
+        docstring), else ``value``.
+        """
+        with self._lock:
+            existing = self._data.get(key)
+            if existing is not None:
+                self._data.move_to_end(key)
+                return existing
+            self._data[key] = value
+            self._insertions += 1
+            while len(self._data) > self._capacity:
+                self._data.popitem(last=False)
+                self._evictions += 1
+            return value
+
+    def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
+        """Hit, or run ``factory`` (unlocked) and insert its result."""
+        with self._lock:
+            try:
+                val = self._data[key]
+            except KeyError:
+                self._misses += 1
+            else:
+                self._data.move_to_end(key)
+                self._hits += 1
+                return val
+        # outside the lock: planning/compiling concurrently for
+        # *different* keys must not serialize; a same-key race is
+        # resolved by insert() (first in wins, loser adopts)
+        return self.insert(key, factory())
+
+    # -- introspection / management ---------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def items(self) -> Iterable[Tuple[Hashable, Any]]:
+        """Snapshot of (key, value) pairs, LRU-first (for persistence)."""
+        with self._lock:
+            return list(self._data.items())
+
+    def info(self) -> dict:
+        """Size/capacity (the historical keys) + the serving metrics."""
+        with self._lock:
+            return {
+                "size": len(self._data),
+                "capacity": self._capacity,
+                "hits": self._hits,
+                "misses": self._misses,
+                "evictions": self._evictions,
+                "insertions": self._insertions,
+            }
+
+    def resize(self, capacity: int) -> None:
+        """Change capacity; evicts LRU-first if shrinking below size."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        with self._lock:
+            self._capacity = capacity
+            while len(self._data) > self._capacity:
+                self._data.popitem(last=False)
+                self._evictions += 1
+
+    def clear(self) -> None:
+        """Drop all entries and reset the metric counters."""
+        with self._lock:
+            self._data.clear()
+            self._hits = self._misses = 0
+            self._evictions = self._insertions = 0

@@ -17,13 +17,12 @@ all implemented on :func:`repro.sparse.plan` + ``SparsePattern``:
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-
 import numpy as np
 
 from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, slot_columns
 from .dispatch import resolve_method
+from .lru import LRUCache
 from .pattern import SparsePattern, plan_coo, validate_accum
 
 
@@ -166,8 +165,11 @@ def fsparse_coo(coo: COO, nzmax: int | None = None,
 # ---------------------------------------------------------------------------
 # sparse2 — pattern-caching assembly (the serving-cache seed)
 # ---------------------------------------------------------------------------
-_PLAN_CACHE: "OrderedDict[tuple, SparsePattern]" = OrderedDict()
-_PLAN_CACHE_CAPACITY = 32
+#: the sparse2 symbolic-plan LRU.  Thread-safe (see repro.sparse.lru):
+#: concurrent sparse2/PlanService request streams share it.  Capacity
+#: is read from REPRO_PLAN_CACHE_SIZE at import; resize at runtime with
+#: ``_PLAN_CACHE.resize(n)``.
+_PLAN_CACHE = LRUCache(32, name="sparse2-plan", env="REPRO_PLAN_CACHE_SIZE")
 
 
 def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
@@ -185,19 +187,17 @@ def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
             tuple(shape), nzmax, method, extra)
 
 
-def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str | None = None, mesh=None, accum: str = "sum"):
-    """``fsparse`` with symbolic-plan reuse across calls.
+def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
+                *, method: str | None = None, mesh=None,
+                accum: str = "sum"):
+    """The shared symbolic phase behind ``sparse2`` and the PlanService.
 
-    Same contract and results as :func:`fsparse`; repeated calls whose
-    index vectors (and shape/nzmax/method/accum) are identical hit a
-    small host-side LRU of :class:`SparsePattern` plans and run only
-    the O(L) numeric phase.  This is the repeated-assembly FEM workflow
-    (fixed mesh, changing element values) as a drop-in call.
-
-    ``method="sharded"`` caches :class:`~repro.sparse.sharded.ShardedPattern`
-    plans the same way (keyed additionally on the mesh), so repeated
-    distributed assembly pays routing + per-block analysis once.
+    Validates/expands the Matlab-style request, resolves its cache key
+    and returns ``(key, pattern, coo)`` with ``pattern`` served from
+    (or inserted into) the thread-safe plan LRU.  ``sparse2`` is this
+    plus ``pattern.assemble``; :class:`repro.sparse.serving.PlanService`
+    is this plus the AOT executable tier — one code path, so the two
+    entry points cannot drift apart.
     """
     method = method if method == "sharded" else resolve_method(method)
     validate_accum(accum)
@@ -216,23 +216,42 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     # part of the cache identity too
     key = _cache_key(np.asarray(coo.rows), np.asarray(coo.cols),
                      coo.shape, nzmax, method, (accum,) + tuple(extra))
-    pat = _PLAN_CACHE.get(key)
-    if pat is None:
+
+    def build():
         if method == "sharded":
-            pat = _plan_sharded_coo(coo, nzmax, mesh)
-        else:
-            pat = plan_coo(coo, nzmax=nzmax, method=method, accum=accum)
-        _PLAN_CACHE[key] = pat
-        while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
-            _PLAN_CACHE.popitem(last=False)
-    else:
-        _PLAN_CACHE.move_to_end(key)
+            return _plan_sharded_coo(coo, nzmax, mesh)
+        return plan_coo(coo, nzmax=nzmax, method=method, accum=accum)
+
+    return key, _PLAN_CACHE.get_or_create(key, build), coo
+
+
+def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
+            *, method: str | None = None, mesh=None, accum: str = "sum"):
+    """``fsparse`` with symbolic-plan reuse across calls.
+
+    Same contract and results as :func:`fsparse`; repeated calls whose
+    index vectors (and shape/nzmax/method/accum) are identical hit a
+    thread-safe host-side LRU of :class:`SparsePattern` plans and run
+    only the O(L) numeric phase.  This is the repeated-assembly FEM
+    workflow (fixed mesh, changing element values) as a drop-in call.
+
+    ``method="sharded"`` caches :class:`~repro.sparse.sharded.ShardedPattern`
+    plans the same way (keyed additionally on the mesh), so repeated
+    distributed assembly pays routing + per-block analysis once.
+    """
+    _, pat, coo = plan_lookup(ii, jj, ss, shape, nzmax, method=method,
+                              mesh=mesh, accum=accum)
     return pat.assemble(coo.vals)
 
 
 def plan_cache_info() -> dict:
-    """Introspection for tests/ops: size + capacity of the sparse2 cache."""
-    return {"size": len(_PLAN_CACHE), "capacity": _PLAN_CACHE_CAPACITY}
+    """Introspection for tests/ops: sparse2 plan-cache state.
+
+    The historical ``size``/``capacity`` keys are kept; ``hits``/
+    ``misses``/``evictions``/``insertions`` are the serving metrics of
+    the shared locked LRU.
+    """
+    return _PLAN_CACHE.info()
 
 
 def plan_cache_clear() -> None:

@@ -86,6 +86,7 @@ __all__ = [
     "register_op",
     "scale",
     "scatter_rows",
+    "spmv_impl",
     "to_dense",
     "transpose",
 ]
@@ -163,6 +164,19 @@ def _spgemm(A, B) -> CSC:
     Ac = convert(A, "csc")
     Bc = convert(B, "csc")
     return cached_product_plan(Ac, Bc).multiply(Ac.data, Bc.data)
+
+
+def spmv_impl(A):
+    """Resolve the per-format spmv implementation for ``A`` once.
+
+    Returns ``(fn, A_resolved)`` — the registered implementation and
+    the (possibly hub-converted) operand it applies to.  The serving
+    AOT tier (:mod:`repro.sparse.serving`) uses this to bake the
+    dispatch decision into a lowered executable at plan time instead of
+    re-dispatching per request; ``fn(A_resolved, x)`` is exactly what
+    :func:`matmul` would run for a dense vector ``x``.
+    """
+    return _dispatch("spmv", A, hub="csc")
 
 
 def matmul(A, x) -> "jax.Array | CSC":

@@ -66,7 +66,6 @@ equations ``A' * A``.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -75,6 +74,7 @@ import numpy as np
 
 from ..core.csc import CSC
 from .formats import CSR
+from .lru import LRUCache
 from .pattern import (
     SparsePattern,
     accum_dtype,
@@ -86,6 +86,7 @@ from .pattern import (
 __all__ = [
     "ProductPattern",
     "product_plan",
+    "product_lookup",
     "cached_product_plan",
     "product_cache_clear",
     "product_cache_info",
@@ -369,8 +370,11 @@ def product_plan(
 # ---------------------------------------------------------------------------
 # Product-plan cache (the sparse2 spirit for repeated products)
 # ---------------------------------------------------------------------------
-_PRODUCT_CACHE: "OrderedDict[tuple, ProductPattern]" = OrderedDict()
-_PRODUCT_CACHE_CAPACITY = 16
+#: thread-safe SpGEMM plan LRU (shared core: repro.sparse.lru).
+#: Capacity is read from REPRO_PRODUCT_CACHE_SIZE at import; resize at
+#: runtime with ``_PRODUCT_CACHE.resize(n)``.
+_PRODUCT_CACHE = LRUCache(16, name="product-plan",
+                          env="REPRO_PRODUCT_CACHE_SIZE")
 
 
 def _structure_key(S) -> tuple:
@@ -387,6 +391,27 @@ def _structure_key(S) -> tuple:
     )
 
 
+def product_lookup(
+    A, B, *, method: str | None = None, nzmax: int | None = None,
+    flops_max: int | None = None,
+) -> tuple:
+    """Cache key + LRU-served :class:`ProductPattern` for one pair.
+
+    The shared symbolic phase behind :func:`cached_product_plan` and
+    the serving layer (which needs the key to persist the entry); the
+    LRU is thread-safe and concurrent misses on different pairs plan in
+    parallel.
+    """
+    key = (_structure_key(A), _structure_key(B), method, nzmax, flops_max)
+    pp = _PRODUCT_CACHE.get_or_create(
+        key,
+        lambda: product_plan(
+            A, B, method=method, nzmax=nzmax, flops_max=flops_max
+        ),
+    )
+    return key, pp
+
+
 def cached_product_plan(
     A, B, *, method: str | None = None, nzmax: int | None = None,
     flops_max: int | None = None,
@@ -398,26 +423,19 @@ def cached_product_plan(
     operands) skip the symbolic phase entirely and pay only the
     O(flops) :meth:`ProductPattern.multiply`.
     """
-    key = (_structure_key(A), _structure_key(B), method, nzmax, flops_max)
-    pp = _PRODUCT_CACHE.get(key)
-    if pp is None:
-        pp = product_plan(
-            A, B, method=method, nzmax=nzmax, flops_max=flops_max
-        )
-        _PRODUCT_CACHE[key] = pp
-        while len(_PRODUCT_CACHE) > _PRODUCT_CACHE_CAPACITY:
-            _PRODUCT_CACHE.popitem(last=False)
-    else:
-        _PRODUCT_CACHE.move_to_end(key)
-    return pp
+    return product_lookup(
+        A, B, method=method, nzmax=nzmax, flops_max=flops_max
+    )[1]
 
 
 def product_cache_info() -> dict:
-    """Introspection for tests/ops: size + capacity of the product cache."""
-    return {
-        "size": len(_PRODUCT_CACHE),
-        "capacity": _PRODUCT_CACHE_CAPACITY,
-    }
+    """Introspection for tests/ops: product plan-cache state.
+
+    The historical ``size``/``capacity`` keys are kept; ``hits``/
+    ``misses``/``evictions``/``insertions`` are the serving metrics of
+    the shared locked LRU.
+    """
+    return _PRODUCT_CACHE.info()
 
 
 def product_cache_clear() -> None:
