@@ -1,0 +1,137 @@
+"""Dynamic-pattern payoff: ``SparsePattern.update`` vs a full re-plan.
+
+ISSUE 7's acceptance bench.  For each Table 4.2 data set the triplet
+stream is split into a base (planned once, with growth headroom) and a
+delta of 1% / 10% / 50% of L, and this times
+
+  replan    fresh ``plan()`` over the concatenated triplets — what a
+            structure change cost before dynamic patterns
+  update    ``base.update(delta)`` — sort only the delta, merge-by-key
+            against the resident sorted stream, O(L + L_delta) rewrite
+
+and reports the update speedup (acceptance floor: >= 3x for deltas
+<= 10% of L at scale 0.1).  Two warm re-validation rows ride along on
+set 1: a warm ``PlanService`` absorbing ``update_structure`` (retire +
+merge + one fill re-lower, unaffected executables untouched) and the
+SpGEMM product re-plan forced by the dependent-structure retirement.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ransparse import dataset
+from repro.sparse import (
+    fsparse,
+    plan,
+    plan_cache_clear,
+    plan_lookup,
+    product_cache_clear,
+    product_lookup,
+    resolve_method,
+)
+from repro.sparse.serving import PlanService
+from repro.sparse.spgemm import _structure_key, retire_structure
+
+from .common import row, time_fn, time_host_fn
+
+#: delta sizes as fractions of the full stream length
+DELTA_FRACTIONS = (0.01, 0.10, 0.50)
+
+
+def _block(pat):
+    jax.block_until_ready((pat.perm, pat.slot, pat.indices, pat.indptr))
+    return pat
+
+
+def run(scale: float = 0.1, method: str | None = None):
+    method = resolve_method(method)
+    rows = []
+    for k in (1, 2, 3):
+        ii, jj, ss, siz = dataset(k, seed=42, scale=scale)
+        M = N = siz
+        L = len(ii)
+        r_np = (ii - 1).astype(np.int32)
+        c_np = (jj - 1).astype(np.int32)
+        for frac in DELTA_FRACTIONS:
+            Ld = max(1, int(L * frac))
+            Lb = L - Ld
+            base = plan(jnp.asarray(r_np[:Lb]), jnp.asarray(c_np[:Lb]),
+                        (M, N), nzmax=L, method=method)
+            dr, dc = r_np[Lb:], c_np[Lb:]
+            r_d = jnp.asarray(r_np)
+            c_d = jnp.asarray(c_np)
+
+            t_replan = time_fn(
+                lambda: plan(r_d, c_d, (M, N), nzmax=L, method=method)
+            )
+            t_update = time_host_fn(
+                lambda: _block(base.update(dr, dc, method=method))
+            )
+            pct = int(round(frac * 100))
+            speedup = t_replan / max(t_update, 1e-9)
+            rows.append(row(
+                f"update_set{k}_delta{pct}_replan", t_replan,
+                L=L, L_delta=Ld, size=siz, method=method, speedup=1.0,
+            ))
+            rows.append(row(
+                f"update_set{k}_delta{pct}_update", t_update,
+                speedup=round(speedup, 2),
+            ))
+    # -- warm re-validation (set 1, 10% delta): serving + SpGEMM --------
+    ii, jj, ss, siz = dataset(1, seed=42, scale=scale)
+    M = N = siz
+    L = len(ii)
+    Ld = max(1, int(L * 0.10))
+    Lb = L - Ld
+    bi, bj, bs = ii[:Lb], jj[:Lb], ss[:Lb].astype(np.float32)
+    di, dj, dv = ii[Lb:], jj[Lb:], ss[Lb:].astype(np.float32)
+
+    plan_cache_clear()
+    product_cache_clear()
+    svc = PlanService(method=method)
+    svc.assemble(bi, bj, bs, (M, N), L)          # warm the structure
+    svc.update_structure(bi, bj, bs, di, dj, dv, (M, N), L)  # compile
+    samples = []
+    for _ in range(5):
+        # re-warm the base entry outside the timed region (each update
+        # retires it), then time one warm delta absorption end to end
+        plan_lookup(bi, bj, bs, (M, N), L, method=method)
+        t0 = time.perf_counter()
+        U = svc.update_structure(bi, bj, bs, di, dj, dv, (M, N), L)
+        jax.block_until_ready(U.data)
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    t_serve = samples[len(samples) // 2] * 1e6
+    exec_info = svc.stats()["exec"]
+    rows.append(row(
+        "update_set1_serving_update", t_serve,
+        L=L, L_delta=Ld,
+        exec_insertions=exec_info["insertions"],
+        exec_evictions=exec_info["evictions"],
+    ))
+
+    # dependent-product re-validation: the update retired A's structure,
+    # so the next product lookup re-runs the symbolic SpGEMM analysis
+    A = fsparse(bi, bj, bs, (M, N), nzmax=L)
+    B = fsparse(bi, bj, bs, (M, N))
+    product_lookup(A, B)
+    sk = _structure_key(A)
+
+    def revalidate():
+        retire_structure(sk)          # what plan_update does on A
+        return product_lookup(A, B)   # purge + symbolic re-plan
+
+    t_reval = time_host_fn(revalidate, warmup=1, iters=3)
+    rows.append(row(
+        "update_set1_spgemm_revalidate", t_reval, L=L,
+    ))
+    product_cache_clear()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

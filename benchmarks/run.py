@@ -29,6 +29,9 @@ Mapping to the paper:
   bench_serving        beyond-paper: PlanService request latency under
                        concurrent threaded load — cold vs warm (p50/p99)
                        vs persistent warm-restart
+  bench_update         beyond-paper: dynamic patterns — delta update
+                       (merge-by-key) vs full re-plan at 1/10/50% of L,
+                       plus warm serving/SpGEMM re-validation
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
   bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
@@ -46,7 +49,9 @@ import time
 #: plan), kernel fills, cached reassembly and the grad-of-fill VJP —
 #: the hot plan/fill paths whose regressions the snapshots exist to
 #: catch.  Oracle/model rows are reported but not gated.
-GATED_ROW_RE = re.compile(r"(_method_|_fill_|_reuse$|_grad$|_post$)")
+GATED_ROW_RE = re.compile(
+    r"(_method_|_fill_|_reuse$|_grad$|_post$|_update$|_replan$)"
+)
 
 #: smallest baseline timing a ratio is meaningful against.  Rows are
 #: recorded at 0.1 us resolution, so a tiny smoke-scale row on a fast
@@ -152,6 +157,7 @@ def main() -> None:
         bench_spmv,
         bench_stream,
         bench_table42,
+        bench_update,
         common,
     )
 
@@ -164,6 +170,7 @@ def main() -> None:
         ),
         "spgemm": lambda: bench_spgemm.run(scale=args.scale),
         "serving": lambda: bench_serving.run(scale=args.scale),
+        "update": lambda: bench_update.run(scale=args.scale),
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),

@@ -1,0 +1,56 @@
+"""Residency-guarded entry point of the merge positioning kernel.
+
+Chooses between the Pallas kernel (``merge.py`` — target keys
+VMEM-resident) and the jnp reference (``ref.py``) by the same budget
+convention as the fused fills: past ``MERGE_RESIDENT_MAX_BYTES`` of
+resident target keys the Pallas kernel would thrash VMEM, so the XLA
+path takes over.  In ``SparsePattern.update`` the hot direction
+searches the *small delta* into the *large surviving stream* — the
+survivors are the targets, and they fit the budget for every Table 4.2
+set well past scale 1.0 (two int32 vectors: 8 bytes per element, 1M
+elements per 8 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .merge import merge_search_pallas
+from .ref import merge_search_ref
+
+#: resident target-key budget (both int32 key vectors together), the
+#: same half-VMEM convention as ``assembly_ops.FUSED_RESIDENT_MAX_BYTES``.
+MERGE_RESIDENT_MAX_BYTES = 8 * 1024 * 1024
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "block_b", "interpret")
+)
+def merge_search(
+    q_rows: jax.Array,
+    q_cols: jax.Array,
+    t_rows: jax.Array,
+    t_cols: jax.Array,
+    *,
+    side: str = "left",
+    block_b: int = 65536,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-query insertion offsets into a sorted target stream.
+
+    Same contract as :func:`repro.kernels.merge.ref.merge_search_ref`
+    (which it matches bit-for-bit); dispatches to the Pallas kernel
+    when the target keys fit the VMEM residency budget.
+    """
+    n = int(t_rows.shape[0])
+    Lq = int(q_rows.shape[0])
+    if n == 0 or Lq == 0:
+        return jnp.zeros((Lq,), jnp.int32)
+    if 2 * n * 4 > MERGE_RESIDENT_MAX_BYTES:
+        return merge_search_ref(q_rows, q_cols, t_rows, t_cols, side=side)
+    return merge_search_pallas(
+        q_rows, q_cols, t_rows, t_cols,
+        side=side, block_b=block_b, interpret=interpret,
+    )

@@ -1,0 +1,80 @@
+"""jnp reference of the two-way merge positioning search.
+
+Merging the sorted delta stream of ``SparsePattern.update`` into a
+pattern's existing sorted ``(col, row)`` stream is a *stable two-way
+merge*: every element's final position is its own index plus the number
+of elements of the OTHER stream that precede it.  Counting those is a
+vectorized binary search (the classic "merge path" partition) — a fixed
+``ceil(log2(n))`` ladder of clamp/gather/compare steps with no
+data-dependent control flow, the shape both XLA and Pallas want.
+
+Keys order lexicographically by ``(col, row)`` — the planner's sort
+order — with the ``row == M`` padding sentinel participating like any
+other key (padding is sorted last within its column group by the sort
+backends, and the merge must preserve exactly that).
+
+``merge_search_ref`` is the pure-jnp reference the Pallas kernel in
+``merge.py`` must match bit-for-bit; it is also the dispatch fallback
+off-TPU and for target streams too large for VMEM residency.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def search_steps(n: int) -> int:
+    """Binary-search iteration count for ``n`` sorted targets.
+
+    The active interval at least halves per step, so ``n.bit_length()``
+    steps drive every query's interval below length 1.
+    """
+    return max(1, int(n).bit_length())
+
+
+def _below(tc, tr, qc, qr, *, inclusive: bool):
+    """Lexicographic (col, row) predicate: target precedes query."""
+    row_cmp = tr <= qr if inclusive else tr < qr
+    return jnp.logical_or(tc < qc, jnp.logical_and(tc == qc, row_cmp))
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def merge_search_ref(
+    q_rows: jax.Array,
+    q_cols: jax.Array,
+    t_rows: jax.Array,
+    t_cols: jax.Array,
+    *,
+    side: str = "left",
+) -> jax.Array:
+    """Per-query count of sorted targets preceding each query key.
+
+    ``t_rows``/``t_cols`` must be (col, row)-lexicographically sorted;
+    queries are unconstrained.  ``side="left"`` counts targets strictly
+    below the query (``searchsorted`` lower bound), ``side="right"``
+    counts targets at-or-below (upper bound) — together they realize
+    the A-before-B tie rule of a stable merge.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    n = int(t_rows.shape[0])
+    Lq = int(q_rows.shape[0])
+    if n == 0 or Lq == 0:
+        return jnp.zeros((Lq,), jnp.int32)
+    inclusive = side == "right"
+    qr = q_rows.astype(jnp.int32)
+    qc = q_cols.astype(jnp.int32)
+    tr = t_rows.astype(jnp.int32)
+    tc = t_cols.astype(jnp.int32)
+    lo = jnp.zeros((Lq,), jnp.int32)
+    hi = jnp.full((Lq,), n, jnp.int32)
+    for _ in range(search_steps(n)):
+        active = lo < hi
+        # clamp keeps the gather in range once an interval collapses
+        mid = jnp.minimum((lo + hi) // 2, n - 1)
+        below = _below(tc[mid], tr[mid], qc, qr, inclusive=inclusive)
+        lo = jnp.where(jnp.logical_and(active, below), mid + 1, lo)
+        hi = jnp.where(jnp.logical_and(active, ~below), mid, hi)
+    return lo

@@ -61,6 +61,7 @@ from .formats import (
 )
 from .lru import LRUCache
 from .matlab import (
+    PlanUpdate,
     find,
     fsparse,
     fsparse_coo,
@@ -69,12 +70,15 @@ from .matlab import (
     plan_cache_clear,
     plan_cache_info,
     plan_lookup,
+    plan_update,
     sparse2,
+    sparse2_update,
 )
 from .pattern import (
     ACCUM_MODES,
     SparsePattern,
     pattern_from_perm,
+    pattern_from_sorted,
     plan,
     plan_coo,
     trivial_pattern,
@@ -86,6 +90,7 @@ from .spgemm import (
     product_cache_info,
     product_lookup,
     product_plan,
+    retire_structure,
 )
 from . import ops
 from .serving import (
@@ -118,6 +123,7 @@ __all__ = [
     "CSR",
     "LRUCache",
     "PlanService",
+    "PlanUpdate",
     "ProductPattern",
     "ShardedCSC",
     "ShardedPattern",
@@ -141,6 +147,7 @@ __all__ = [
     "nnz_of",
     "ops",
     "pattern_from_perm",
+    "pattern_from_sorted",
     "plan",
     "plan_cache_clear",
     "plan_cache_info",
@@ -148,6 +155,7 @@ __all__ = [
     "plan_lookup",
     "plan_sharded",
     "plan_sharded_coo",
+    "plan_update",
     "product_cache_clear",
     "product_cache_info",
     "product_lookup",
@@ -156,10 +164,12 @@ __all__ = [
     "register_format",
     "register_method",
     "resolve_method",
+    "retire_structure",
     "runtime_env",
     "save_caches",
     "sorted_permutation",
     "sparse2",
+    "sparse2_update",
     "spmv",
     "spmv_t",
     "tcmalloc_hint",

@@ -28,6 +28,11 @@ through :func:`sorted_permutation` and never branch on the name again.
 ``method=None`` anywhere resolves to :func:`default_method`, which is
 backend-aware: ``"radix"`` on TPU, ``"fused"`` off-TPU (where the
 Pallas kernels would run in interpret mode and the XLA sort wins).
+
+The *merge* backends (``SparsePattern.update``'s delta merge-by-key —
+``repro.kernels.merge``) follow the same pattern with their own
+registry: :func:`register_merge_method` / :func:`merge_search` /
+:func:`default_merge_method` (``"pallas"`` on TPU, ``"jnp"`` off-TPU).
 """
 from __future__ import annotations
 
@@ -185,3 +190,77 @@ register_method("jnp", _perm_jnp)
 register_method("fused", _perm_fused)
 register_method("pallas", _perm_pallas)
 register_method("radix", _perm_radix)
+
+
+# ---------------------------------------------------------------------------
+# Merge backends (SparsePattern.update's sorted-stream merge-by-key)
+# ---------------------------------------------------------------------------
+_MERGE_METHODS: Dict[str, PermFn] = {}
+
+#: merge backend ``merge_method=None`` resolves to on TPU.
+DEFAULT_MERGE_TPU = "pallas"
+#: off-TPU merge default: the Pallas search would run in interpret
+#: mode, so the pure-jnp binary search wins (bit-identical by contract).
+DEFAULT_MERGE_INTERPRET = "jnp"
+
+
+def register_merge_method(name: str, fn: PermFn) -> None:
+    """Register a merge-search backend:
+    ``fn(q_rows, q_cols, t_rows, t_cols, *, side, **kw) -> offsets``."""
+    _MERGE_METHODS[name] = fn
+
+
+def available_merge_methods() -> tuple[str, ...]:
+    return tuple(sorted(_MERGE_METHODS))
+
+
+def default_merge_method() -> str:
+    """Backend used when callers pass ``merge_method=None``."""
+    return DEFAULT_MERGE_TPU if jax.default_backend() == "tpu" \
+        else DEFAULT_MERGE_INTERPRET
+
+
+def resolve_merge_method(method: str | None) -> str:
+    return default_merge_method() if method is None else method
+
+
+def merge_search(
+    q_rows: jax.Array, q_cols: jax.Array,
+    t_rows: jax.Array, t_cols: jax.Array, *,
+    side: str = "left", method: str | None = None, **kwargs
+) -> jax.Array:
+    """Per-query insertion offsets into a (col,row)-sorted target stream.
+
+    ``side="left"`` counts targets strictly below each query key,
+    ``side="right"`` counts targets at-or-below — the two halves of a
+    stable merge's tie rule.  All backends are bit-identical.
+    """
+    method = resolve_merge_method(method)
+    try:
+        fn = _MERGE_METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown merge method {method!r}; "
+            f"available: {available_merge_methods()}"
+        ) from None
+    return fn(q_rows, q_cols, t_rows, t_cols, side=side, **kwargs)
+
+
+def _merge_jnp(q_rows, q_cols, t_rows, t_cols, *, side="left"):
+    """Pure-jnp vectorized binary search (lazy import, like the sorts)."""
+    from ..kernels.merge.ref import merge_search_ref
+
+    return merge_search_ref(q_rows, q_cols, t_rows, t_cols, side=side)
+
+
+def _merge_pallas(q_rows, q_cols, t_rows, t_cols, *, side="left",
+                  block_b: int = 65536, interpret: bool | None = None):
+    """Residency-guarded Pallas search (falls back to jnp past budget)."""
+    from ..kernels.merge.ops import merge_search as _pallas_search
+
+    return _pallas_search(q_rows, q_cols, t_rows, t_cols, side=side,
+                          block_b=block_b, interpret=interpret)
+
+
+register_merge_method("jnp", _merge_jnp)
+register_merge_method("pallas", _merge_pallas)

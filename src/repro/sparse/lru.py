@@ -124,6 +124,30 @@ class LRUCache:
         # resolved by insert() (first in wins, loser adopts)
         return self.insert(key, factory())
 
+    def pop(self, key: Hashable, default: Any = None) -> Any:
+        """Remove and return an entry (``default`` when absent).
+
+        Deliberate retirement (a structure was rewritten in place by a
+        delta update), not capacity pressure — so it does not count as
+        an eviction and touches no metric counters.
+        """
+        with self._lock:
+            return self._data.pop(key, default)
+
+    def purge(self, predicate: Callable[[Hashable], bool]) -> int:
+        """Drop every entry whose *key* satisfies ``predicate``.
+
+        Returns the number of entries removed.  Like :meth:`pop`, a
+        purge is retirement, not eviction — the metrics only track
+        capacity behavior.  ``predicate`` runs under the lock: keep it
+        cheap and never have it re-enter the cache.
+        """
+        with self._lock:
+            doomed = [k for k in self._data if predicate(k)]
+            for k in doomed:
+                del self._data[k]
+            return len(doomed)
+
     # -- introspection / management ---------------------------------------
     def __len__(self) -> int:
         with self._lock:

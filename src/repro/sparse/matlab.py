@@ -17,6 +17,9 @@ all implemented on :func:`repro.sparse.plan` + ``SparsePattern``:
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.coo import COO, coo_from_matlab
@@ -75,7 +78,8 @@ def expand_indices(ii, jj, ss):
 
 
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str | None = None, mesh=None, accum: str = "sum"):
+            *, method: str | None = None, mesh=None, accum: str = "sum",
+            nzmax_slack: int = 0):
     """Assemble a sparse matrix from Matlab-style triplet data.
 
     >>> import numpy as np
@@ -110,11 +114,12 @@ def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     if method == "sharded":
         _reject_sharded_accum(accum)
+        _reject_sharded_slack(nzmax_slack)
         pat = _plan_sharded_coo(coo, nzmax, mesh)
         return pat.assemble(coo.vals)
     _reject_unused_mesh(mesh, method)
-    return plan_coo(coo, nzmax=nzmax, method=method,
-                    accum=accum).assemble(coo.vals)
+    return plan_coo(coo, nzmax=nzmax, method=method, accum=accum,
+                    nzmax_slack=nzmax_slack).assemble(coo.vals)
 
 
 def _reject_unused_mesh(mesh, method):
@@ -131,6 +136,15 @@ def _reject_sharded_accum(accum):
             f"accum={accum!r} is not supported with method='sharded' "
             "(the distributed fill reduces with scatter-add); assemble "
             "per-shard with plan(..., accum=...) or drop method='sharded'"
+        )
+
+
+def _reject_sharded_slack(nzmax_slack):
+    if nzmax_slack:
+        raise ValueError(
+            "nzmax_slack is per-pattern growth headroom but sharded "
+            "storage is per-block (and ShardedPattern.update is not "
+            "supported); pass capacity knobs to plan_sharded directly"
         )
 
 
@@ -189,7 +203,7 @@ def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
 
 def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
                 *, method: str | None = None, mesh=None,
-                accum: str = "sum"):
+                accum: str = "sum", nzmax_slack: int = 0):
     """The shared symbolic phase behind ``sparse2`` and the PlanService.
 
     Validates/expands the Matlab-style request, resolves its cache key
@@ -198,16 +212,23 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
     plus ``pattern.assemble``; :class:`repro.sparse.serving.PlanService`
     is this plus the AOT executable tier — one code path, so the two
     entry points cannot drift apart.
+
+    ``nzmax_slack`` folds into the resolved ``nzmax`` (``L + slack``)
+    *before* keying, so a slack-planned structure and an explicit
+    ``nzmax=L+slack`` request share one cache entry.
     """
     method = method if method == "sharded" else resolve_method(method)
     validate_accum(accum)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
+    if nzmax is None and nzmax_slack and method != "sharded":
+        nzmax = int(coo.rows.shape[0]) + int(nzmax_slack)
     extra = ()
     if method == "sharded":
         from .sharded import mesh_fingerprint, resolve_mesh
 
         _reject_sharded_accum(accum)
+        _reject_sharded_slack(nzmax_slack)
         mesh = resolve_mesh(mesh)
         extra = mesh_fingerprint(mesh, "data")
     else:
@@ -226,7 +247,8 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
 
 
 def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
-            *, method: str | None = None, mesh=None, accum: str = "sum"):
+            *, method: str | None = None, mesh=None, accum: str = "sum",
+            nzmax_slack: int = 0):
     """``fsparse`` with symbolic-plan reuse across calls.
 
     Same contract and results as :func:`fsparse`; repeated calls whose
@@ -240,8 +262,125 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     distributed assembly pays routing + per-block analysis once.
     """
     _, pat, coo = plan_lookup(ii, jj, ss, shape, nzmax, method=method,
-                              mesh=mesh, accum=accum)
+                              mesh=mesh, accum=accum,
+                              nzmax_slack=nzmax_slack)
     return pat.assemble(coo.vals)
+
+
+# ---------------------------------------------------------------------------
+# Delta re-planning facade (SparsePattern.update through the plan cache)
+# ---------------------------------------------------------------------------
+class PlanUpdate(NamedTuple):
+    """Result of :func:`plan_update`.
+
+    ``key``/``pattern`` identify the *updated* structure in the plan
+    LRU; ``coo`` is the concatenated (surviving + delta) zero-offset
+    triplet stream whose values align with ``pattern`` (so
+    ``pattern.assemble(coo.vals)`` is the updated matrix).  ``old_key``/
+    ``old_pattern`` are the pre-update entry — equal to the new ones
+    when the update was a no-op — so callers (the serving layer) can
+    retire executables and persisted entries keyed on the old structure.
+    """
+
+    key: tuple
+    pattern: SparsePattern
+    coo: COO
+    old_key: tuple
+    old_pattern: SparsePattern
+
+
+def plan_update(ii, jj, ss, add_ii, add_jj, add_ss, shape=None,
+                nzmax: int | None = None, *, drop_mask=None,
+                method: str | None = None, accum: str = "sum",
+                nzmax_slack: int = 0) -> PlanUpdate:
+    """Delta re-planning through the ``sparse2`` plan cache.
+
+    ``(ii, jj, ss, shape, nzmax[, nzmax_slack], method, accum)``
+    identify the *base* structure exactly as a ``sparse2`` call would
+    (a cold base is planned and cached first); ``add_ii``/``add_jj``/
+    ``add_ss`` are unit-offset Matlab-style delta triplets (validated
+    against the base shape — growing the shape is a re-plan, not an
+    update) and ``drop_mask`` flags expanded base triplets to remove.
+    The base plan is rewritten by :meth:`SparsePattern.update` (epoch
+    bumped, merge-by-key — see there for the capacity/fallback
+    contract), the LRU entry moves from the old key to the
+    concatenated-stream key in place, and dependent SpGEMM products
+    are retired lazily via
+    :func:`repro.sparse.spgemm.retire_structure`.
+
+    The new entry is keyed with the updated pattern's concrete
+    ``nzmax``, so a later ``sparse2(cat_i, cat_j, cat_s, shape,
+    nzmax=result.pattern.nzmax)`` over the concatenated triplets hits
+    it without re-planning.
+    """
+    method = resolve_method(method)
+    if method == "sharded":
+        raise ValueError(
+            "plan_update does not support method='sharded': deltas are "
+            "not routed per row block (ShardedPattern.update raises); "
+            "re-plan with plan_sharded"
+        )
+    validate_accum(accum)
+    bi, bj, bs = expand_indices(ii, jj, ss)
+    coo = coo_from_matlab(bi, bj, bs, shape=shape)
+    L = int(coo.rows.shape[0])
+    if nzmax is None and nzmax_slack:
+        nzmax = L + int(nzmax_slack)
+    rows_b = np.asarray(coo.rows)
+    cols_b = np.asarray(coo.cols)
+    old_key = _cache_key(rows_b, cols_b, coo.shape, nzmax, method,
+                         (accum,))
+    base = _PLAN_CACHE.get_or_create(
+        old_key,
+        lambda: plan_coo(coo, nzmax=nzmax, method=method, accum=accum),
+    )
+    # delta validated against the *base* shape: an out-of-range delta
+    # index raises Matlab's "index exceeds matrix dimensions" here
+    di, dj, dv = expand_indices(add_ii, add_jj, add_ss)
+    dcoo = coo_from_matlab(di, dj, dv, shape=coo.shape)
+    new_pat = base.update(np.asarray(dcoo.rows), np.asarray(dcoo.cols),
+                          drop_mask=drop_mask, method=method)
+    vals_b = np.asarray(coo.vals)
+    if drop_mask is not None:
+        dm = np.asarray(drop_mask).astype(bool)
+        if dm.any():
+            keep = ~dm
+            rows_b, cols_b = rows_b[keep], cols_b[keep]
+            vals_b = vals_b[keep]
+    rows_cat = np.concatenate([rows_b, np.asarray(dcoo.rows)])
+    cols_cat = np.concatenate([cols_b, np.asarray(dcoo.cols)])
+    vals_cat = np.concatenate([vals_b, np.asarray(dcoo.vals)])
+    new_coo = COO(rows=jnp.asarray(rows_cat), cols=jnp.asarray(cols_cat),
+                  vals=jnp.asarray(vals_cat), shape=coo.shape)
+    if new_pat is base:  # no-op update: nothing moved, nothing retired
+        return PlanUpdate(old_key, base, new_coo, old_key, base)
+    new_key = _cache_key(rows_cat, cols_cat, coo.shape, new_pat.nzmax,
+                         method, (accum,))
+    _PLAN_CACHE.pop(old_key)
+    new_pat = _PLAN_CACHE.insert(new_key, new_pat)
+    from .spgemm import _structure_key, retire_structure
+
+    retire_structure(_structure_key(base))
+    return PlanUpdate(new_key, new_pat, new_coo, old_key, base)
+
+
+def sparse2_update(ii, jj, ss, add_ii, add_jj, add_ss, shape=None,
+                   nzmax: int | None = None, *, drop_mask=None,
+                   method: str | None = None, accum: str = "sum",
+                   nzmax_slack: int = 0) -> CSC:
+    """Incrementally re-planned ``sparse2``: refine, then refill.
+
+    Returns the assembled matrix of the concatenated (surviving base +
+    delta) triplets — bit-identical to ``fsparse`` over that stream
+    with the same capacity — while the cached symbolic plan is *merged
+    forward* (:func:`plan_update`) instead of thrown away: only the
+    delta is sorted, and subsequent ``sparse2``/``plan_update`` calls
+    against the updated structure keep hitting the cache.
+    """
+    res = plan_update(ii, jj, ss, add_ii, add_jj, add_ss, shape, nzmax,
+                      drop_mask=drop_mask, method=method, accum=accum,
+                      nzmax_slack=nzmax_slack)
+    return res.pattern.assemble(res.coo.vals)
 
 
 def plan_cache_info() -> dict:

@@ -49,14 +49,16 @@ carries.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.coo import COO
 from ..core.csc import CSC
-from .dispatch import sorted_permutation
+from .dispatch import merge_search, sorted_permutation
 
 #: duplicate-combination modes of the numeric phase.  ``"sum"`` is the
 #: Matlab ``sparse`` contract; the rest mirror ``accumarray`` with
@@ -74,6 +76,15 @@ class SparsePattern:
     All array fields are length-``L`` or length-``nzmax`` with static
     shapes; ``row == M`` input sentinels were already routed to the
     drop slot, so the numeric phase needs no masking branches.
+
+    ``srows``/``scols`` carry the sorted ``(col, row)`` key stream
+    (``rows[perm]``/``cols[perm]``, padding sentinels included) — the
+    state :meth:`update` merges a sorted delta against without
+    re-sorting the survivors.  ``epoch`` is a static structure-version
+    counter: value-only changes never retrace a jitted consumer, while
+    an :meth:`update` bumps it so dependent caches (plan LRU, SpGEMM
+    products, AOT executables) can tell a rewritten structure from the
+    one they compiled against.
     """
 
     perm: jax.Array     # int32[L]
@@ -81,9 +92,14 @@ class SparsePattern:
     indices: jax.Array  # int32[nzmax]; M sentinel in the padded tail
     indptr: jax.Array   # int32[N+1]
     nnz: jax.Array      # int32 scalar
+    srows: jax.Array    # int32[L]; sorted row keys (= rows[perm])
+    scols: jax.Array    # int32[L]; sorted col keys (= cols[perm])
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     accum: str = dataclasses.field(
         default="sum", metadata=dict(static=True)
+    )
+    epoch: int = dataclasses.field(
+        default=0, metadata=dict(static=True)
     )
 
     # -- static geometry --------------------------------------------------
@@ -201,6 +217,160 @@ class SparsePattern:
                 f"planned for L={self.L} triplets"
             )
         return _scatter_vjp(self.nzmax, accum, self.perm, self.slot, mat)
+
+    # -- incremental symbolic phase ---------------------------------------
+    def _input_keys(self) -> tuple[np.ndarray, np.ndarray]:
+        """Original input-order (rows, cols), reconstructed host-side.
+
+        ``perm`` is a permutation of the input stream and ``srows``/
+        ``scols`` are its sorted image, so one scatter inverts exactly —
+        the full re-plan fallback of :meth:`update` rebuilds the
+        concatenated triplet stream from this.
+        """
+        perm = np.asarray(self.perm)
+        rows = np.empty((self.L,), np.int32)
+        cols = np.empty((self.L,), np.int32)
+        rows[perm] = np.asarray(self.srows)
+        cols[perm] = np.asarray(self.scols)
+        return rows, cols
+
+    def update(
+        self,
+        add_rows,
+        add_cols,
+        drop_mask=None,
+        *,
+        nzmax: int | None = None,
+        method: str | None = None,
+        merge_method: str | None = None,
+    ) -> "SparsePattern":
+        """Incremental re-plan: merge a delta stream into this plan.
+
+        ``add_rows``/``add_cols`` are zero-offset index vectors of new
+        triplets (``row == M`` marks padding, exactly like :func:`plan`);
+        ``drop_mask`` is an optional boolean vector over the *original
+        input order* (length L) marking triplets to remove.  The result
+        is **bit-identical** to a fresh ``plan()`` over the concatenated
+        (surviving + delta) stream — for every registered sort backend —
+        but only the O(L_delta log L_delta) delta is sorted: the
+        surviving sorted stream is kept and the delta is positioned by
+        the merge-by-key search (``merge_method=``, see
+        ``repro.sparse.dispatch``; the Pallas kernel lives in
+        ``repro.kernels.merge``), then ``perm``/``slot``/``indices``/
+        ``indptr`` are rewritten in O(L + L_delta).
+
+        Capacity: an explicit ``nzmax=`` wins; otherwise the plan's own
+        ``nzmax`` is kept while the merged stream fits, and once the
+        headroom is exhausted the call degrades to a full re-plan with a
+        one-time :class:`RuntimeWarning` (pre-reserve headroom with
+        ``plan(..., nzmax_slack=)`` to stay on the merge path).  An
+        empty update (no delta, no effective drops) returns ``self``
+        unchanged — no kernel launch, no epoch bump.  Updating a
+        trivial (empty/zero-dim) plan degrades to a plain ``plan()``.
+        The returned pattern's ``epoch`` is ``self.epoch + 1``.
+        """
+        M, N = self.M, self.N
+        L = self.L
+        ar = np.asarray(add_rows)
+        ac = np.asarray(add_cols)
+        if ar.ndim != 1 or ar.shape != ac.shape:
+            raise ValueError(
+                f"add_rows/add_cols must be equal-length 1-d vectors; "
+                f"got shapes {ar.shape} and {ac.shape}"
+            )
+        ar = ar.astype(np.int32)
+        ac = ac.astype(np.int32)
+        L_delta = int(ar.shape[0])
+        dm = None
+        if drop_mask is not None:
+            dm = np.asarray(drop_mask)
+            if dm.shape != (L,):
+                raise ValueError(
+                    f"drop_mask has shape {dm.shape} but this pattern "
+                    f"was planned for L={L} input triplets"
+                )
+            dm = dm.astype(bool)
+            if not dm.any():
+                dm = None
+        n_drop = 0 if dm is None else int(dm.sum())
+        if L_delta == 0 and n_drop == 0:
+            return self
+        L_keep = L - n_drop
+        L_new = L_keep + L_delta
+        headroom = max(0, self.nzmax - L)
+        if nzmax is not None:
+            new_nzmax = int(nzmax)
+            fallback = False
+        elif L_new <= self.nzmax:
+            new_nzmax = self.nzmax
+            fallback = False
+        else:
+            new_nzmax = L_new + headroom
+            fallback = True
+        bump = dict(accum=self.accum, epoch=self.epoch + 1)
+        if L_new == 0:
+            return dataclasses.replace(
+                trivial_pattern(0, (M, N), nzmax=new_nzmax), **bump
+            )
+        if L == 0 or M == 0 or N == 0:
+            # trivial base: nothing to merge against (an empty stream)
+            # or a zero-dim shape where structure is key-independent —
+            # degrade to a plain plan() over the concatenated stream
+            rows0, cols0 = self._input_keys()
+            keep = slice(None) if dm is None else ~dm
+            pat = plan(
+                jnp.asarray(np.concatenate([rows0[keep], ar])),
+                jnp.asarray(np.concatenate([cols0[keep], ac])),
+                (M, N), nzmax=new_nzmax, method=method,
+            )
+            return dataclasses.replace(pat, **bump)
+        if fallback:
+            global _UPDATE_FALLBACK_WARNED
+            if not _UPDATE_FALLBACK_WARNED:
+                _UPDATE_FALLBACK_WARNED = True
+                warnings.warn(
+                    f"SparsePattern.update: the merged stream "
+                    f"(L={L_new}) exceeds this plan's nzmax="
+                    f"{self.nzmax} growth headroom — falling back to a "
+                    "full re-plan over the concatenated triplets. "
+                    "Pre-reserve capacity with plan(..., nzmax_slack=) "
+                    "(or fsparse/sparse2 nzmax_slack=) to keep updates "
+                    "on the O(L + L_delta) merge path.",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            rows0, cols0 = self._input_keys()
+            keep = slice(None) if dm is None else ~dm
+            pat = plan(
+                jnp.asarray(np.concatenate([rows0[keep], ar])),
+                jnp.asarray(np.concatenate([cols0[keep], ac])),
+                (M, N), nzmax=new_nzmax, method=method,
+            )
+            return dataclasses.replace(pat, **bump)
+        # -- merge path: survivors stay sorted, only the delta sorts ----
+        if dm is None:
+            sr_a, sc_a, pa = self.srows, self.scols, self.perm
+        else:
+            # drops have data-dependent survivor counts: compact on the
+            # host.  New input position of survivor p is p minus the
+            # dropped positions below it (the fresh concatenated stream
+            # the merge must stay bit-identical to renumbers this way).
+            perm_np = np.asarray(self.perm).astype(np.int64)
+            shift = np.concatenate(
+                [[0], np.cumsum(dm.astype(np.int64))[:-1]]
+            )
+            keep_sorted = ~dm[perm_np]
+            pa = jnp.asarray(
+                (perm_np - shift[perm_np])[keep_sorted].astype(np.int32)
+            )
+            sr_a = jnp.asarray(np.asarray(self.srows)[keep_sorted])
+            sc_a = jnp.asarray(np.asarray(self.scols)[keep_sorted])
+        pat = _merge_sorted_streams(
+            sr_a, sc_a, pa, jnp.asarray(ar), jnp.asarray(ac),
+            jnp.int32(L_keep), M=M, N=N, nzmax=new_nzmax,
+            method=method, merge_method=merge_method,
+        )
+        return dataclasses.replace(pat, **bump)
 
 
 def fill_dtype(vals) -> jnp.dtype:
@@ -424,8 +594,28 @@ def pattern_from_perm(
     Shared tail of every planning backend (jnp / fused / pallas): the
     sort strategies differ only in how ``perm`` is produced.
     """
-    r_s = rows[perm]
-    c_s = cols[perm]
+    return pattern_from_sorted(
+        rows[perm], cols[perm], perm, M=M, N=N, nzmax=nzmax
+    )
+
+
+def pattern_from_sorted(
+    r_s: jax.Array,
+    c_s: jax.Array,
+    perm: jax.Array,
+    *,
+    M: int,
+    N: int,
+    nzmax: int,
+) -> SparsePattern:
+    """Parts 3-4 on an already-sorted key stream.
+
+    The tail shared by :func:`pattern_from_perm` (which sorts to get
+    here) and the merge path of :meth:`SparsePattern.update` (which
+    *merges* to get here, never re-sorting the survivors): ``r_s``/
+    ``c_s`` are the (col,row)-ordered keys and ``perm`` maps sorted
+    position back to input position.
+    """
     valid = r_s < M
     first = jnp.concatenate(
         [
@@ -434,19 +624,28 @@ def pattern_from_perm(
         ]
     )
     first = jnp.logical_and(first, valid)
-    jc_counts = jnp.bincount(
-        jnp.where(first, c_s, N), length=N + 1
-    )[:N].astype(jnp.int32)
-    jcS = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(jc_counts).astype(jnp.int32)]
+    # everything below is phrased gather-side (searchsorted + take):
+    # XLA scatter cost scales with the update count, so the old
+    # L-update bincount/indices scatters were the tail's hot spots
+    cum_first = jnp.cumsum(first.astype(jnp.int32)).astype(jnp.int32)
+    cum0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), cum_first])
+    # column j's pointer = uniques strictly before its first position
+    # (c_s is globally col-sorted; padding sits inside its col group
+    # with first == False, so it never moves a boundary count)
+    col_bnd = jnp.searchsorted(
+        c_s, jnp.arange(N + 1, dtype=jnp.int32), side="left"
     )
+    jcS = cum0[col_bnd].astype(jnp.int32)
     nnz = jcS[-1].astype(jnp.int32)
-    irankP = (jnp.cumsum(first.astype(jnp.int32)) - 1).astype(jnp.int32)
+    irankP = cum_first - 1
     slot = jnp.where(valid, irankP, nzmax).astype(jnp.int32)
-    indices = (
-        jnp.full((nzmax,), M, jnp.int32)
-        .at[jnp.where(first, irankP, nzmax)]
-        .set(r_s.astype(jnp.int32), mode="drop")
+    # row of the s-th unique = r_s where cum_first first reaches s+1;
+    # s >= nnz searches past the stream and take() fills the sentinel
+    upos = jnp.searchsorted(
+        cum_first, jnp.arange(1, nzmax + 1, dtype=jnp.int32), side="left"
+    )
+    indices = jnp.take(
+        r_s.astype(jnp.int32), upos, mode="fill", fill_value=M
     )
     return SparsePattern(
         perm=perm.astype(jnp.int32),
@@ -454,8 +653,69 @@ def pattern_from_perm(
         indices=indices,
         indptr=jcS,
         nnz=nnz,
+        srows=r_s.astype(jnp.int32),
+        scols=c_s.astype(jnp.int32),
         shape=(M, N),
     )
+
+
+#: one-time nzmax-headroom fallback warning state (mirrors the
+#: ``_perm_fused`` int32-overflow pattern in ``dispatch``).
+_UPDATE_FALLBACK_WARNED = False
+
+
+def _reset_update_fallback_warning() -> None:
+    """Test hook: re-arm the one-time update-fallback warning."""
+    global _UPDATE_FALLBACK_WARNED
+    _UPDATE_FALLBACK_WARNED = False
+
+
+@partial(jax.jit, static_argnames=("M", "N", "nzmax", "method",
+                                   "merge_method"))
+def _merge_sorted_streams(
+    sr_a, sc_a, pa, add_rows, add_cols, L_keep, *,
+    M: int, N: int, nzmax: int, method: str | None,
+    merge_method: str | None,
+):
+    """Sort the delta, stable-merge it into the survivors, run the tail.
+
+    Stream A (the surviving base) wins ties — exactly the order a fresh
+    stable sort over the concatenated input gives, since every survivor
+    precedes every delta element in input order.  Only the small delta
+    binary-searches the large survivor stream (``O(L_delta log L)`` —
+    the Pallas kernel direction with the survivors VMEM-resident).  The
+    merged streams are then materialized **gather-side**: one
+    O(L_delta) scatter marks the delta's landing positions, a cumsum
+    turns the marks into per-position source indices, and three O(L)
+    gathers build the merged keys/perm — no scatter ever touches the
+    large stream (XLA scatter cost scales with the update count, so
+    big-side scatters would cost as much as the re-sort this path
+    exists to avoid).  One jit end to end, feeding the shared Parts-3/4
+    tail.
+    """
+    nA, nB = sr_a.shape[0], add_rows.shape[0]
+    Lm = nA + nB
+    if nB == 0:
+        return pattern_from_sorted(sr_a, sc_a, pa, M=M, N=N, nzmax=nzmax)
+    dperm = sorted_permutation(add_rows, add_cols, M=M, N=N, method=method)
+    sr_b = add_rows[dperm]
+    sc_b = add_cols[dperm]
+    # delta elements land after every survivor in the concatenated
+    # input order: offset their perm values past the survivors
+    pb = dperm.astype(jnp.int32) + jnp.int32(L_keep)
+    off_b = merge_search(sr_b, sc_b, sr_a, sc_a, side="right",
+                         method=merge_method)
+    pos_b = jnp.arange(nB, dtype=jnp.int32) + off_b
+    occ = jnp.zeros((Lm,), jnp.int32).at[pos_b].set(1, mode="drop")
+    nb_upto = jnp.cumsum(occ).astype(jnp.int32)  # deltas at positions <= q
+    q = jnp.arange(Lm, dtype=jnp.int32)
+    is_b = occ == 1
+    # source index into concat([A, B]) for every merged position
+    g = jnp.where(is_b, nA + nb_upto - 1, q - nb_upto)
+    r_m = jnp.concatenate([sr_a, sr_b])[g]
+    c_m = jnp.concatenate([sc_a, sc_b])[g]
+    p_m = jnp.concatenate([pa, pb])[g]
+    return pattern_from_sorted(r_m, c_m, p_m, M=M, N=N, nzmax=nzmax)
 
 
 def trivial_pattern(
@@ -479,12 +739,18 @@ def trivial_pattern(
         indices=jnp.full((nzmax,), M, jnp.int32),
         indptr=jnp.zeros((N + 1,), jnp.int32),
         nnz=jnp.zeros((), jnp.int32),
+        # key storage is degenerate here: every entry of a trivial plan
+        # is structural padding, so ``update`` never merges against it
+        # (it degrades to a plain plan) and zero keys are as good as any
+        srows=jnp.zeros((L,), jnp.int32),
+        scols=jnp.zeros((L,), jnp.int32),
         shape=(M, N),
         accum=accum,
     )
 
 
-@partial(jax.jit, static_argnames=("shape", "nzmax", "method", "accum"))
+@partial(jax.jit, static_argnames=("shape", "nzmax", "method", "accum",
+                                   "nzmax_slack"))
 def plan(
     rows: jax.Array,
     cols: jax.Array,
@@ -493,6 +759,7 @@ def plan(
     nzmax: int | None = None,
     method: str | None = None,
     accum: str = "sum",
+    nzmax_slack: int = 0,
 ) -> SparsePattern:
     """Symbolic phase: run the paper's Parts 1-4 once, capture the plan.
 
@@ -503,13 +770,18 @@ def plan(
     production default: ``"radix"`` on TPU, ``"fused"`` off-TPU).
     ``accum`` fixes how duplicate (i, j) values combine in the numeric
     phase (see :data:`ACCUM_MODES`; structure is accum-independent).
+    ``nzmax_slack`` pre-reserves growth headroom for
+    :meth:`SparsePattern.update` — when ``nzmax`` is ``None`` the
+    capacity becomes ``L + nzmax_slack``, so up to ``nzmax_slack`` net
+    new triplets merge in place without the full re-plan fallback
+    (ignored when an explicit ``nzmax`` is given).
     The result is reusable for any
     number of :meth:`SparsePattern.assemble` calls with different value
     vectors.
     """
     M, N = int(shape[0]), int(shape[1])
     L = rows.shape[0]
-    nzmax = L if nzmax is None else nzmax
+    nzmax = L + int(nzmax_slack) if nzmax is None else nzmax
     validate_accum(accum)
     if L == 0 or M == 0 or N == 0:
         # Matlab empty-matrix semantics: no entry can be structural
@@ -524,7 +796,8 @@ def plan(
 
 
 def plan_coo(coo: COO, *, nzmax: int | None = None,
-             method: str | None = None, accum: str = "sum") -> SparsePattern:
+             method: str | None = None, accum: str = "sum",
+             nzmax_slack: int = 0) -> SparsePattern:
     """``plan`` over a :class:`repro.core.COO` container."""
     return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method,
-                accum=accum)
+                accum=accum, nzmax_slack=nzmax_slack)

@@ -75,7 +75,7 @@ import numpy as np
 from ..core.csc import CSC
 from .formats import CSR, convert
 from .lru import LRUCache
-from .matlab import plan_cache_info, plan_lookup, _PLAN_CACHE
+from .matlab import plan_cache_info, plan_lookup, plan_update, _PLAN_CACHE
 from .ops import matmul as _ops_matmul, spmv_impl
 from .pattern import SparsePattern
 from .spgemm import (
@@ -358,6 +358,38 @@ class PlanService:
             raise ValueError("PlanService has no cache_dir to save into")
         return save_caches(self.cache_dir)
 
+    def _retire_persisted(self, old_key, old_structure_key) -> None:
+        """Drop on-disk entries for a structure rewritten by an update.
+
+        The plan entry is addressed directly by its key; product entries
+        are keyed on *both* operands' structure keys, so the on-disk
+        product files are scanned and any whose key references the
+        retired structure is unlinked.  All best-effort: a stale file
+        that survives only costs one wasted load on the next restart
+        (the in-memory caches were already purged).
+        """
+        if self.cache_dir is None:
+            return
+        with self._persist_lock:
+            self._persisted.discard(("plan", _entry_digest(old_key)))
+        try:
+            _entry_path(self.cache_dir, "plan", old_key).unlink(
+                missing_ok=True)
+        except OSError:
+            pass
+        for path in self.cache_dir.glob("product-*.pkl"):
+            try:
+                with open(path, "rb") as f:
+                    payload = pickle.load(f)
+                k = payload.get("key", ())
+                if len(k) >= 2 and old_structure_key in (k[0], k[1]):
+                    with self._persist_lock:
+                        self._persisted.discard(
+                            ("product", _entry_digest(payload["key"])))
+                    path.unlink(missing_ok=True)
+            except Exception:  # noqa: BLE001 - stale file, not a crash
+                pass
+
     # -- AOT executable tier ----------------------------------------------
     def _aot(self, ekey, build):
         return self._execs.get_or_create(ekey, build)
@@ -450,6 +482,57 @@ class PlanService:
             for b, i in enumerate(idxs):
                 results[i] = self._wrap(pat, data_b[b])
         return results
+
+    def update_structure(self, ii, jj, ss, add_ii, add_jj, add_ss,
+                         shape=None, nzmax: int | None = None, *,
+                         drop_mask=None, method: str | None = None,
+                         accum: str = "sum",
+                         nzmax_slack: int = 0) -> CSC:
+        """Absorb a structural delta without cold-starting the structure.
+
+        Runs :func:`repro.sparse.plan_update` (merge-forward delta
+        re-planning through the shared plan LRU), then reconciles the
+        serving tiers: AOT executables bound to the *old* structure —
+        its fill, and any SpGEMM/SpMV executables lowered against its
+        index arrays — are retired from the executable LRU, persisted
+        entries for the old structure are unlinked from ``cache_dir``,
+        and only the updated structure's fill is (re-)lowered.
+        Executables for unrelated structures are untouched, so a warm
+        service absorbs a delta at the cost of one merge + one fill
+        compile, not a cache flush.
+
+        Returns the assembled updated matrix (bit-identical to a cold
+        :meth:`assemble` over the concatenated surviving + delta
+        triplets).
+        """
+        res = plan_update(
+            ii, jj, ss, add_ii, add_jj, add_ss, shape, nzmax,
+            drop_mask=drop_mask,
+            method=self.method if method is None else method,
+            accum=accum, nzmax_slack=nzmax_slack,
+        )
+        if res.pattern is not res.old_pattern:
+            from .spgemm import _structure_key
+
+            old_sk = _structure_key(res.old_pattern)
+
+            def _stale(ekey) -> bool:
+                kind = ekey[0]
+                if kind == "fill":
+                    return ekey[1] == res.old_key
+                if kind == "multiply":
+                    return old_sk in (ekey[1][0], ekey[1][1])
+                if kind == "spmv":
+                    return ekey[2] == old_sk
+                return False
+
+            self._execs.purge(_stale)
+            self._retire_persisted(res.old_key, old_sk)
+        self._persist("plan", res.key, res.pattern)
+        fill = self._fill_executable(res.key, res.pattern,
+                                     res.coo.vals.shape,
+                                     res.coo.vals.dtype)
+        return self._wrap(res.pattern, fill(res.coo.vals))
 
     def multiply(self, A, B, *, method: str | None = None,
                  nzmax: int | None = None,

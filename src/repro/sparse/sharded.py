@@ -281,6 +281,23 @@ class ShardedPattern:
         )
         return self._wrap(data)
 
+    def update(self, add_rows, add_cols, drop_mask=None, **kwargs):
+        """Structural deltas are not yet routed per row block.
+
+        The dispatch seam exists so facade code can call ``.update`` on
+        any pattern type, but an incremental merge would have to rewrite
+        every block's local stream *and* the cross-device routing
+        tables; until that lands, re-plan with :func:`plan_sharded`
+        over the concatenated triplets, or assemble unsharded
+        (``method=None``) and use :meth:`SparsePattern.update`.
+        """
+        raise NotImplementedError(
+            "ShardedPattern.update: incremental deltas are not yet "
+            "routed per row block — re-plan with plan_sharded(...) over "
+            "the concatenated triplets, or assemble unsharded and use "
+            "SparsePattern.update"
+        )
+
     def _pad_vals(self, vals: jax.Array) -> jax.Array:
         if vals.shape[-1] != self.L:
             raise ValueError(

@@ -66,6 +66,7 @@ equations ``A' * A``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 
 import jax
@@ -90,6 +91,7 @@ __all__ = [
     "cached_product_plan",
     "product_cache_clear",
     "product_cache_info",
+    "retire_structure",
 ]
 
 
@@ -111,6 +113,11 @@ class ProductPattern:
     pattern: SparsePattern  # C's plan over the expanded (i, j) stream
     a_capacity: int = dataclasses.field(metadata=dict(static=True))
     b_capacity: int = dataclasses.field(metadata=dict(static=True))
+    #: static structure-version stamp, derived from the operand plans'
+    #: ``epoch`` fields at planning time: a product planned against a
+    #: since-updated operand carries a stale epoch, and jitted consumers
+    #: retrace exactly once when the re-planned product replaces it.
+    epoch: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     # -- static geometry --------------------------------------------------
     @property
@@ -364,6 +371,7 @@ def product_plan(
         pattern=pat,
         a_capacity=cap_A,
         b_capacity=cap_B,
+        epoch=int(getattr(A, "epoch", 0)) + int(getattr(B, "epoch", 0)),
     )
 
 
@@ -391,6 +399,41 @@ def _structure_key(S) -> tuple:
     )
 
 
+#: operand structure keys retired by delta updates
+#: (``SparsePattern.update`` through the ``plan_update`` facade).
+#: Dependent cached products are dropped *lazily* — at the next
+#: ``product_lookup`` — instead of eagerly walking the cache per update:
+#: a churning structure that is never multiplied again costs nothing,
+#: and a stale :class:`ProductPattern` can never be served because every
+#: lookup purges first.
+_RETIRED_STRUCTURES: set = set()
+_RETIRED_LOCK = threading.Lock()
+
+
+def retire_structure(structure_key: tuple) -> None:
+    """Mark one operand structure (a :func:`_structure_key` token) stale.
+
+    Called by the delta-update facade when a plan's structure is
+    rewritten in place; cached products that consumed the old structure
+    are dropped at the next lookup so they cannot leak or be served
+    stale.
+    """
+    with _RETIRED_LOCK:
+        _RETIRED_STRUCTURES.add(structure_key)
+
+
+def _purge_retired() -> int:
+    """Drop cached products whose operands were retired; returns count."""
+    with _RETIRED_LOCK:
+        if not _RETIRED_STRUCTURES:
+            return 0
+        retired = frozenset(_RETIRED_STRUCTURES)
+        _RETIRED_STRUCTURES.clear()
+    return _PRODUCT_CACHE.purge(
+        lambda key: key[0] in retired or key[1] in retired
+    )
+
+
 def product_lookup(
     A, B, *, method: str | None = None, nzmax: int | None = None,
     flops_max: int | None = None,
@@ -400,8 +443,12 @@ def product_lookup(
     The shared symbolic phase behind :func:`cached_product_plan` and
     the serving layer (which needs the key to persist the entry); the
     LRU is thread-safe and concurrent misses on different pairs plan in
-    parallel.
+    parallel.  Products whose operand structures were retired by a
+    delta update (:func:`retire_structure`) are purged before the
+    lookup, so a rewritten structure re-plans instead of serving the
+    stale expansion maps.
     """
+    _purge_retired()
     key = (_structure_key(A), _structure_key(B), method, nzmax, flops_max)
     pp = _PRODUCT_CACHE.get_or_create(
         key,

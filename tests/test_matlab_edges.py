@@ -239,3 +239,65 @@ def test_transpose_diagonal_sharded_via_hub():
     np.testing.assert_array_equal(np.asarray(ops.to_dense(T)), dense.T)
     np.testing.assert_array_equal(
         np.asarray(ops.diagonal(A)), np.diag(dense)[: min(A.shape)])
+
+
+# ---------------------------------------------------------------------------
+# Delta-update edge cases (ISSUE 7 satellite): empty deltas are
+# no-ops, trivial bases degrade to a plain plan
+# ---------------------------------------------------------------------------
+def _base_pattern(method, L=40, shape=(9, 7), seed=3):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, shape[0], L).astype(np.int32)
+    cols = rng.integers(0, shape[1], L).astype(np.int32)
+    return plan(rows, cols, shape, method=method), rows, cols
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_update_empty_delta_is_identity_every_method(method):
+    """L_delta == 0 with no drops must return *the same object* — no
+    merge kernel launch, no epoch bump, bit-identical by construction."""
+    if method == "sharded":
+        pytest.skip("sharded patterns reject update by contract")
+    pat, _, _ = _base_pattern(method)
+    out = pat.update(np.zeros(0, np.int32), np.zeros(0, np.int32))
+    assert out is pat
+    # an all-False drop mask is the same no-op
+    out2 = pat.update(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                      drop_mask=np.zeros(pat.L, bool))
+    assert out2 is pat
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_update_trivial_base_degrades_to_plan_every_method(method):
+    """Updating an L == 0 (or zero-dim) base is just a plan over the
+    delta — same structure as ``plan``, with the epoch bumped."""
+    if method == "sharded":
+        pytest.skip("sharded patterns reject update by contract")
+    shape = (6, 5)
+    base = plan(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), shape,
+                method=method)
+    dr = np.array([2, 0, 2], np.int32)
+    dc = np.array([1, 3, 1], np.int32)
+    got = base.update(dr, dc, method=method)
+    want = plan(dr, dc, shape, method=method)
+    assert got.epoch == 1
+    for field in ("perm", "slot", "indices", "indptr", "srows", "scols"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)),
+            np.asarray(getattr(want, field)), err_msg=field)
+    assert int(got.nnz) == int(want.nnz)
+
+
+@pytest.mark.parametrize("method", available_methods())
+def test_update_drop_to_empty_every_method(method):
+    """Dropping every triplet with no additions yields the all-padding
+    trivial pattern at the retained capacity."""
+    if method == "sharded":
+        pytest.skip("sharded patterns reject update by contract")
+    pat, _, _ = _base_pattern(method, L=12)
+    out = pat.update(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                     drop_mask=np.ones(pat.L, bool))
+    assert out.L == 0 and int(out.nnz) == 0 and out.epoch == 1
+    assert out.nzmax == pat.nzmax  # headroom retained
+    np.testing.assert_array_equal(
+        np.asarray(out.indptr), np.zeros(pat.shape[1] + 1, np.int32))

