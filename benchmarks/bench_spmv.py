@@ -1,12 +1,19 @@
-"""FEM-consumer benchmark: repeated assembly + SpMV (the paper's
-motivating workload — re-assembly inside time-stepping loops, §1).
+"""SpMV format benchmark: plain CSC vs SymCSC vs BSR (+ the original
+FEM assemble+solve cycle, §1's motivating workload).
 
-Times one assemble + k SpMV cycle at FEM-like sparsity (7 nnz/row,
-~12-48 collisions — the paper's 3D Laplace example) and reports the
-assembly : solve ratio, the quantity that decides whether assembly is
-the bottleneck (the paper's premise).  Runs on the transform-native
-API: ``plan(...)`` + fill for assembly, ``ops.matmul`` for the solve
-leg (one operator surface per registered format, CSC here).
+The format rows answer the PR-8 question: how much does halving the
+stored stream (SymCSC: strict upper + dense diagonal, one fused sweep
+covering both triangles) or blocking it (BSR: dense ``b x b`` tiles,
+one index per block) buy on the paper's Table 4.1 data sets,
+symmetrized.  Each row reports a bytes-moved model and the achieved
+bandwidth next to the timing, because SpMV is memory-bound — the
+speedup should track the bytes ratio, and the ``exact`` flag pins
+bit-identity of the results (integer-valued data, so every order of
+summation is exact in f32).
+
+The ``*_fill_*`` rows time the numeric refill through the cached plan
+(the repeated-assembly workflow): the SymCSC plan streams half the
+slots, so the refill should roughly halve too.
 """
 from __future__ import annotations
 
@@ -14,14 +21,50 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.ransparse import ransparse
-from repro.sparse import ops, plan
+from repro.core.ransparse import dataset, ransparse
+from repro.sparse import find, fsparse, ops, plan, plan_symmetric
+from repro.sparse.formats import convert
 
 from .common import row, time_fn
 
+#: f32 data + i32 indices: 8 bytes per stored scalar entry.
+_ENTRY = 8
+_W = 4  # one f32/i32 word
 
-def run(siz: int = 20_000, nnz_row: int = 7, nrep: int = 3, k_spmv: int = 10):
-    ii, jj, ss, _ = ransparse(siz, nnz_row, nrep, seed=11)
+
+def _bytes_csc(nzmax: int, M: int, N: int) -> int:
+    # data + indices, indptr, x gathered once, y written once
+    return _ENTRY * nzmax + _W * (N + 1) + 2 * _W * M
+
+
+def _bytes_sym(nu: int, M: int) -> int:
+    # halved stream + dense diagonal vector
+    return _ENTRY * nu + _W * (M + 1) + 3 * _W * M
+
+
+def _bytes_bsr(nb: int, b: int, M: int, N: int) -> int:
+    # b*b values but ONE index per stored block
+    return (_W * b * b + _W) * nb + _W * (N // b + 1) + 2 * _W * M
+
+
+def _compact(ii, jj, vv, shape):
+    """CSC with nzmax == nnz (dedup through one assembly round-trip)."""
+    S0 = fsparse(ii, jj, vv, shape)
+    i2, j2, v2 = find(S0)
+    return fsparse(i2, j2, v2, shape)
+
+
+def _symmetrize(ii, jj):
+    """Mirror the (unit-offset) structure so every entry has its twin."""
+    return np.concatenate([ii, jj]), np.concatenate([jj, ii])
+
+
+def run(scale: float = 0.1, fem_siz: int = 20_000, k_spmv: int = 10):
+    out = []
+
+    # -- original §1 FEM assemble+solve cycle (kept for continuity) ----
+    siz = max(8, int(fem_siz * scale * 10))
+    ii, jj, ss, _ = ransparse(siz, 7, 3, seed=11)
     r = jnp.asarray((ii - 1).astype(np.int32))
     c = jnp.asarray((jj - 1).astype(np.int32))
     v = jnp.asarray(ss.astype(np.float32))
@@ -35,12 +78,91 @@ def run(siz: int = 20_000, nnz_row: int = 7, nrep: int = 3, k_spmv: int = 10):
     x = jnp.ones((siz,), jnp.float32)
     matmul = jax.jit(ops.matmul)
     t_spmv = time_fn(lambda: matmul(A, x))
-    return [
+    out += [
         row("fem_assembly", t_asm, L=len(ii), nnz=int(A.nnz)),
         row("fem_spmv", t_spmv,
             asm_over_spmv=round(t_asm / t_spmv, 2),
             cycle_frac_assembly=round(t_asm / (t_asm + k_spmv * t_spmv), 3)),
     ]
+
+    rng = np.random.default_rng(17)
+
+    # -- symmetric sets: CSC vs SymCSC ---------------------------------
+    for k in (1, 2, 3):
+        ii, jj, ss, siz = dataset(k, seed=4, scale=scale)
+        si, sj = _symmetrize(ii, jj)
+        sv = np.ones(len(si), np.float32)
+        Sc = _compact(si, sj, sv, (siz, siz))
+        Ssym = convert(Sc, "symcsc")
+        xk = jnp.asarray(rng.integers(0, 4, siz).astype(np.float32))
+
+        t_csc = time_fn(lambda: matmul(Sc, xk))
+        t_sym = time_fn(lambda: matmul(Ssym, xk))
+        exact = bool(jnp.array_equal(matmul(Sc, xk), matmul(Ssym, xk)))
+
+        b_csc = _bytes_csc(int(Sc.nzmax), siz, siz)
+        b_sym = _bytes_sym(int(Ssym.nzmax), siz)
+        out.append(row(
+            f"sym_set{k}_spmv_csc", t_csc, nnz=int(Sc.nnz),
+            bytes_moved=b_csc,
+            bandwidth_gbs=round(b_csc / t_csc * 1e-3, 2)))
+        out.append(row(
+            f"sym_set{k}_spmv_symcsc", t_sym, nu=int(Ssym.nnz),
+            bytes_moved=b_sym,
+            bandwidth_gbs=round(b_sym / t_sym * 1e-3, 2),
+            speedup=round(t_csc / t_sym, 2),
+            bytes_ratio=round(b_csc / b_sym, 2),
+            exact=exact))
+
+        # numeric refill through the cached plan: full vs halved stream
+        r0 = jnp.asarray((si - 1).astype(np.int32))
+        c0 = jnp.asarray((sj - 1).astype(np.int32))
+        vs = jnp.asarray(sv)
+        pat = plan(np.asarray(r0), np.asarray(c0), (siz, siz))
+        spat = plan_symmetric(np.asarray(r0), np.asarray(c0), (siz, siz))
+        fill = jax.jit(pat.assemble)
+        sfill = jax.jit(spat.assemble)
+        t_fill = time_fn(lambda: fill(vs))
+        t_sfill = time_fn(lambda: sfill(vs))
+        out.append(row(f"sym_set{k}_fill_csc", t_fill,
+                       slots=int(pat.nzmax)))
+        out.append(row(f"sym_set{k}_fill_symcsc", t_sfill,
+                       slots=int(spat.nzmax),
+                       speedup=round(t_fill / t_sfill, 2)))
+
+    # -- blocked sets: CSC vs BSR (b x b dense-block expansion) --------
+    b = 2
+    for k in (1, 2, 3):
+        ii, jj, ss, sizb = dataset(k, seed=4, scale=scale / b)
+        bi = np.repeat(ii - 1, b * b) * b + np.tile(
+            np.repeat(np.arange(b), b), len(ii))
+        bj = np.repeat(jj - 1, b * b) * b + np.tile(
+            np.tile(np.arange(b), b), len(jj))
+        siz2 = sizb * b
+        Sc = _compact(bi + 1, bj + 1, np.ones(len(bi), np.float32),
+                      (siz2, siz2))
+        Sb = convert(Sc, "bsr", block=b)
+        xk = jnp.asarray(rng.integers(0, 4, siz2).astype(np.float32))
+
+        t_csc = time_fn(lambda: matmul(Sc, xk))
+        t_bsr = time_fn(lambda: matmul(Sb, xk))
+        exact = bool(jnp.array_equal(matmul(Sc, xk), matmul(Sb, xk)))
+
+        b_csc = _bytes_csc(int(Sc.nzmax), siz2, siz2)
+        b_bsr = _bytes_bsr(int(Sb.nnz), b, siz2, siz2)
+        out.append(row(
+            f"blk_set{k}_b{b}_spmv_csc", t_csc, nnz=int(Sc.nnz),
+            bytes_moved=b_csc,
+            bandwidth_gbs=round(b_csc / t_csc * 1e-3, 2)))
+        out.append(row(
+            f"blk_set{k}_b{b}_spmv_bsr", t_bsr, nblocks=int(Sb.nnz),
+            bytes_moved=b_bsr,
+            bandwidth_gbs=round(b_bsr / t_bsr * 1e-3, 2),
+            speedup=round(t_csc / t_bsr, 2),
+            bytes_ratio=round(b_csc / b_bsr, 2),
+            exact=exact))
+
+    return out
 
 
 if __name__ == "__main__":

@@ -35,7 +35,9 @@ Mapping to the paper:
   bench_access_counts  Tables 2.1/3.1 memory-access complexity
   bench_stream         §4.3 STREAM bandwidth roof
   bench_moe_dispatch   §2.1 extension: assembly as MoE dispatch
-  bench_spmv           §1 motivating FEM assemble+solve cycle
+  bench_spmv           §1 FEM assemble+solve cycle, plus PR-8 format
+                       rows: CSC vs SymCSC (fused both-triangles) vs
+                       BSR with bytes-moved / bandwidth columns
 """
 from __future__ import annotations
 
@@ -50,7 +52,7 @@ import time
 #: the hot plan/fill paths whose regressions the snapshots exist to
 #: catch.  Oracle/model rows are reported but not gated.
 GATED_ROW_RE = re.compile(
-    r"(_method_|_fill_|_reuse$|_grad$|_post$|_update$|_replan$)"
+    r"(_method_|_fill_|_reuse$|_grad$|_post$|_update$|_replan$|_spmv_)"
 )
 
 #: smallest baseline timing a ratio is meaningful against.  Rows are
@@ -174,7 +176,7 @@ def main() -> None:
         "access_counts": lambda: bench_access_counts.run(),
         "stream": lambda: bench_stream.run(scale=args.scale),
         "moe_dispatch": lambda: bench_moe_dispatch.run(),
-        "spmv": lambda: bench_spmv.run(),
+        "spmv": lambda: bench_spmv.run(scale=args.scale),
     }
     print("name,us_per_call,derived")
     results: dict[str, list[dict]] = {}

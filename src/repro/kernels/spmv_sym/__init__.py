@@ -1,0 +1,3 @@
+"""Fused both-triangles symmetric SpMV + blocked (BSR) SpMV kernels."""
+from .ops import FUSED_RESIDENT_MAX_BYTES, spmv_bsr, spmv_sym  # noqa: F401
+from .ref import spmv_bsr_ref, spmv_sym_ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""Dispatchers for the symmetric / blocked SpMV kernel family.
+
+Backend policy (mirrors ``kernels/segment_sum``): on a real TPU the
+Pallas kernels run compiled with the dense vector VMEM-resident,
+guarded by the shared 8 MB residency cap; off-TPU the jnp oracles in
+:mod:`.ref` run directly — they are the fast path there, and
+interpret-mode Pallas would only add overhead.  ``interpret=True``
+forces the kernels through the interpreter for cross-validation tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.csc import slot_columns
+from ..common import INTERPRET
+from ..segment_sum.ops import FUSED_RESIDENT_MAX_BYTES  # shared cap
+from .ref import spmv_bsr_ref, spmv_sym_ref
+from .spmv_sym import bsr_tiles, sym_streams
+
+
+def _use_kernel(resident_bytes: int, interpret: bool | None) -> bool:
+    if resident_bytes > FUSED_RESIDENT_MAX_BYTES:
+        return False
+    if interpret is None:
+        return not INTERPRET          # compiled kernel only on real TPU
+    return True                       # explicit True/False: run Pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def spmv_sym(diag, data, indices, indptr, x, *, block_b: int = 65536,
+             interpret: bool | None = None) -> jax.Array:
+    """Fused both-triangles symmetric SpMV over strict-upper storage.
+
+    One sweep of the halved stream accumulates ``y[i] += a * x[j]`` and
+    ``y[j] += a * x[i]`` per stored upper entry (plus the dense
+    diagonal) — see :func:`.ref.spmv_sym_ref` for the exact semantics;
+    this wrapper only chooses between the Pallas kernel and the oracle.
+    """
+    M = diag.shape[0]
+    nzmax = data.shape[-1]
+    if M == 0 or nzmax == 0 or not _use_kernel(x.nbytes, interpret):
+        return spmv_sym_ref(diag, data, indices, indptr, x)
+    cols = jnp.clip(slot_columns(indptr, nzmax), 0, M - 1)
+    up, cs = sym_streams(indices, cols, data, x, M=M, block_b=block_b,
+                         interpret=interpret)
+    y = diag.astype(data.dtype) * x
+    y = y.at[jnp.where(indices < M, indices, 0)].add(up)
+    csum = jnp.concatenate([jnp.zeros((1,), cs.dtype), cs])
+    return y + (csum[indptr[1:]] - csum[indptr[:-1]])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shape", "block", "block_t", "interpret"))
+def spmv_bsr(data, indices, indptr, x, *, shape, block: int,
+             block_t: int = 4096, interpret: bool | None = None) -> jax.Array:
+    """Blocked SpMV: dense ``b x b`` register tiles over block-CSC."""
+    M, N = shape
+    b = int(block)
+    nbmax = data.shape[0]
+    resident = (N // b) * b * x.dtype.itemsize if b else 0
+    if M == 0 or nbmax == 0 or b == 0 \
+            or not _use_kernel(resident, interpret):
+        return spmv_bsr_ref(data, indices, indptr, x, shape=shape,
+                            block=block)
+    Mb, Nb = M // b, N // b
+    bcols = jnp.clip(slot_columns(indptr, nbmax), 0, max(Nb - 1, 0))
+    dtype = jnp.result_type(data, x)
+    tiles = bsr_tiles(indices, bcols, data.astype(dtype),
+                      x.astype(dtype).reshape(Nb, b), Mb=Mb,
+                      block_t=block_t, interpret=interpret)
+    y = jnp.zeros((Mb, b), dtype).at[
+        jnp.where(indices < Mb, indices, 0)
+    ].add(tiles)
+    return y.reshape(M)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the symmetric / blocked SpMV family.
+
+These are not just test oracles: off-TPU they ARE the production path
+(the dispatcher in :mod:`.ops` skips interpret-mode Pallas overhead),
+so they are written for speed — the column-direction contribution is
+extracted from a global cumsum as per-column boundary differences
+(invertible-monoid trick of ``kernels/segment_sum``) instead of a
+second scatter, and the row-direction scatter moves only the *halved*
+strict-upper stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.csc import slot_columns
+
+
+def spmv_sym_ref(diag, data, indices, indptr, x) -> jax.Array:
+    """y = (diag(diag) + U + U.T) @ x over strict-upper CSC storage.
+
+    Per stored entry ``a = U[i, j]`` (``i < j``) both triangles are
+    applied in one sweep: ``y[i] += a * x[j]`` (row direction, one
+    scatter-add over the half stream) and ``y[j] += a * x[i]`` (column
+    direction, scatter-free via cumsum boundary differences — the
+    stream is column-sorted so each column's total is contiguous).
+    """
+    M = diag.shape[0]
+    nzmax = data.shape[-1]
+    y = diag.astype(data.dtype) * x
+    if nzmax == 0 or M == 0:
+        return y
+    cols = slot_columns(indptr, nzmax)
+    valid = indices < M
+    r = jnp.where(valid, indices, 0)
+    c = jnp.where(valid, jnp.clip(cols, 0, M - 1), 0)
+    zero = jnp.zeros((), data.dtype)
+    up = jnp.where(valid, data * x[c], zero)      # y[i] += a * x[j]
+    lo = jnp.where(valid, data * x[r], zero)      # y[j] += a * x[i]
+    y = y.at[r].add(jnp.where(valid, up, zero))
+    csum = jnp.concatenate([jnp.zeros((1,), lo.dtype), jnp.cumsum(lo)])
+    return y + (csum[indptr[1:]] - csum[indptr[:-1]])
+
+
+def spmv_bsr_ref(data, indices, indptr, x, *, shape, block) -> jax.Array:
+    """y = A @ x over block-CSC storage: per-tile dense contraction.
+
+    Gathers ``x`` one aligned ``b``-slice per stored block, contracts
+    each dense ``b x b`` tile against it, and scatter-adds the per-tile
+    partials into block rows — ``b*b`` useful flops per gathered index,
+    vs. one for scalar CSC.
+    """
+    M, N = shape
+    b = int(block)
+    Mb, Nb = M // b, N // b
+    nbmax = data.shape[0]
+    dtype = jnp.result_type(data, x)
+    if nbmax == 0 or M == 0:
+        return jnp.zeros((M,), dtype)
+    bcols = slot_columns(indptr, nbmax)
+    valid = indices < Mb
+    br = jnp.where(valid, indices, 0)
+    bc = jnp.where(valid, jnp.clip(bcols, 0, max(Nb - 1, 0)), 0)
+    xg = x.reshape(Nb, b)[bc]                            # [nbmax, b]
+    contrib = jnp.einsum("kij,kj->ki", data.astype(dtype),
+                         xg.astype(dtype))
+    contrib = jnp.where(valid[:, None], contrib, 0)
+    y = jnp.zeros((Mb, b), dtype).at[br].add(contrib)
+    return y.reshape(M)

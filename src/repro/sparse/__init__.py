@@ -52,8 +52,10 @@ from .dispatch import (
     sorted_permutation,
 )
 from .formats import (
+    BSR,
     CSR,
     SparseMatrix,
+    SymCSC,
     convert,
     format_of,
     register_converter,
@@ -77,10 +79,15 @@ from .matlab import (
 from .pattern import (
     ACCUM_MODES,
     SparsePattern,
+    SymPattern,
+    detect_block,
+    detect_symmetry,
     pattern_from_perm,
     pattern_from_sorted,
+    pattern_symmetric,
     plan,
     plan_coo,
+    plan_symmetric,
     trivial_pattern,
 )
 from .spgemm import (
@@ -118,6 +125,7 @@ def assemble(coo: COO, *, nzmax: int | None = None,
 
 __all__ = [
     "ACCUM_MODES",
+    "BSR",
     "COO",
     "CSC",
     "CSR",
@@ -129,6 +137,8 @@ __all__ = [
     "ShardedPattern",
     "SparseMatrix",
     "SparsePattern",
+    "SymCSC",
+    "SymPattern",
     "apply_runtime_env",
     "assemble",
     "cached_product_plan",
@@ -136,6 +146,8 @@ __all__ = [
     "convert",
     "coo_from_matlab",
     "default_method",
+    "detect_block",
+    "detect_symmetry",
     "enable_compilation_cache",
     "find",
     "format_of",
@@ -148,6 +160,7 @@ __all__ = [
     "ops",
     "pattern_from_perm",
     "pattern_from_sorted",
+    "pattern_symmetric",
     "plan",
     "plan_cache_clear",
     "plan_cache_info",
@@ -155,6 +168,7 @@ __all__ = [
     "plan_lookup",
     "plan_sharded",
     "plan_sharded_coo",
+    "plan_symmetric",
     "plan_update",
     "product_cache_clear",
     "product_cache_info",

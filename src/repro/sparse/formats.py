@@ -1,8 +1,9 @@
-"""Unified ``SparseMatrix`` protocol, the CSR format, and a registry.
+"""Unified ``SparseMatrix`` protocol, the format zoo, and a registry.
 
 The format zoo (:class:`~repro.core.coo.COO` triplets, the paper's
-padded :class:`~repro.core.csc.CSC`, and the new :class:`CSR`) is
-unified behind one structural protocol plus a conversion registry, so
+padded :class:`~repro.core.csc.CSC`, the row-compressed :class:`CSR`,
+and the bandwidth-oriented :class:`SymCSC` / :class:`BSR`) is unified
+behind one structural protocol plus a conversion registry, so
 consumers write ``convert(A, "csr")`` instead of format-specific glue.
 
 All formats keep the repo's static-shape discipline: fixed capacity,
@@ -16,9 +17,10 @@ from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.coo import COO
-from ..core.csc import CSC, slot_columns
+from ..core.csc import CSC, csc_to_dense, slot_columns
 
 
 @runtime_checkable
@@ -222,12 +224,376 @@ def csr_to_csc(A: CSR) -> CSC:
                shape=A.shape)
 
 
+# ---------------------------------------------------------------------------
+# SymCSC: upper-triangle-only storage for structurally symmetric matrices
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SymCSC:
+    """Symmetric matrix stored as a dense diagonal + strict upper triangle.
+
+    Semantics: ``A == diag(diag) + U + U.T`` where ``U`` is the strict
+    upper triangle held in CSC layout.  Storing one triangle halves the
+    value/index stream a bandwidth-bound SpMV has to move — the fused
+    both-triangles kernel accumulates ``y[i] += a*x[j]`` and
+    ``y[j] += a*x[i]`` per stored entry in a single sweep.
+
+    diag    : float[M]       -- ALL diagonal entries, dense by convention
+                                (FEM stiffness diagonals are structurally
+                                full; zeros cost nothing extra)
+    data    : float[nzmax]   -- strict-upper values, zeros in padded tail
+    indices : int32[nzmax]   -- strict-upper rows; ``M`` sentinel in tail
+    indptr  : int32[N+1]     -- column pointer over the strict upper part
+    nnz     : int32 scalar   -- structural strict-upper count
+    shape   : (M, M) static  -- always square
+    """
+
+    diag: jax.Array
+    data: jax.Array
+    indices: jax.Array
+    indptr: jax.Array
+    nnz: jax.Array
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nzmax(self) -> int:
+        """Strict-upper capacity (half the full-format stream)."""
+        return int(self.data.shape[-1])
+
+    @property
+    def M(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.shape[1])
+
+    @property
+    def nnz_total(self):
+        """Matlab-visible stored-entry count of the expanded matrix."""
+        return 2 * self.nnz + self.M
+
+    def to_dense(self) -> jax.Array:
+        upper = csc_to_dense(
+            self.data, self.indices, self.indptr, M=self.M, N=self.N
+        )
+        return upper + upper.T + jnp.diag(self.diag.astype(self.data.dtype))
+
+
+def csc_to_symcsc(A: CSC) -> SymCSC:
+    """Validate + compact a plain CSC into SymCSC (host-side, like find).
+
+    Requires a square matrix whose deduplicated structure AND stored
+    values are exactly symmetric; raises ``ValueError`` naming the
+    plain-CSC fallback otherwise.  Diagonal entries need not be
+    structurally present — missing ones become explicit zeros in the
+    dense ``diag`` vector.
+    """
+    M, N = A.shape
+    if M != N:
+        raise ValueError(
+            f"symcsc requires a square matrix, got shape {A.shape}; "
+            "keep the plain 'csc' format for rectangular matrices"
+        )
+    cols = np.asarray(slot_columns(A.indptr, A.nzmax))
+    r = np.asarray(A.indices)
+    v = np.asarray(A.data)
+    valid = r < M
+    r = r[valid].astype(np.int64)
+    c = cols[valid].clip(0, max(N - 1, 0)).astype(np.int64)
+    v = v[valid]
+    # the stored stream is (col, row)-sorted and deduplicated, so the
+    # keys are strictly increasing and mirrors resolve by binary search
+    key = c * M + r
+    mkey = r * M + c
+    pos = np.searchsorted(key, mkey).clip(0, max(key.size - 1, 0))
+    if key.size and not np.array_equal(key[pos], mkey):
+        bad = int(np.nonzero(key[pos] != mkey)[0][0])
+        raise ValueError(
+            f"structure is not symmetric: entry ({int(r[bad]) + 1}, "
+            f"{int(c[bad]) + 1}) has no mirror; keep the plain 'csc' "
+            "format for unsymmetric matrices"
+        )
+    if key.size and not np.array_equal(v[pos], v):
+        bad = int(np.nonzero(v[pos] != v)[0][0])
+        raise ValueError(
+            f"values are not symmetric: A({int(r[bad]) + 1}, "
+            f"{int(c[bad]) + 1}) != A({int(c[bad]) + 1}, "
+            f"{int(r[bad]) + 1}); keep the plain 'csc' format"
+        )
+    diag = np.zeros(M, v.dtype)
+    dmask = r == c
+    diag[r[dmask]] = v[dmask]
+    up = r < c
+    counts = np.bincount(c[up], minlength=N)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return SymCSC(
+        diag=jnp.asarray(diag),
+        data=jnp.asarray(v[up]),
+        indices=jnp.asarray(r[up].astype(np.int32)),
+        indptr=jnp.asarray(indptr),
+        nnz=jnp.int32(int(up.sum())),
+        shape=(M, N),
+    )
+
+
+def symcsc_to_coo(A: SymCSC) -> COO:
+    """Expand to triplets: dense diagonal + upper + mirrored lower."""
+    M, N = A.shape
+    cols = slot_columns(A.indptr, A.nzmax)
+    valid = A.indices < M
+    r = jnp.where(valid, A.indices, M).astype(jnp.int32)
+    c = jnp.where(valid, jnp.clip(cols, 0, max(N - 1, 0)), 0).astype(jnp.int32)
+    v = jnp.where(valid, A.data, 0.0)
+    ar = jnp.arange(M, dtype=jnp.int32)
+    return COO(
+        rows=jnp.concatenate([ar, r, jnp.where(valid, c, M).astype(jnp.int32)]),
+        cols=jnp.concatenate([ar, c, jnp.where(valid, r, 0).astype(jnp.int32)]),
+        vals=jnp.concatenate([A.diag.astype(A.data.dtype), v, v]),
+        shape=A.shape,
+    )
+
+
+def symcsc_to_csc(A: SymCSC) -> CSC:
+    """Direct demotion: one half-size stable sort, no re-planning.
+
+    The upper block is already in CSC order; the mirrored lower block
+    needs the upper triangle's CSR view, which is ONE stable argsort of
+    the half-length stream (vs. a full (col, row) sort of the expanded
+    ``2*nnz + M`` triplets through the COO hub).  Per output column the
+    three groups — upper rows ``< j``, the diagonal, mirrored rows
+    ``> j`` — occupy disjoint sorted ranges, so placement is pure
+    pointer arithmetic.
+    """
+    M, N = A.shape
+    nu = A.nzmax
+    cols = slot_columns(A.indptr, nu)
+    valid = A.indices < M
+    rU = jnp.where(valid, A.indices, M)
+    cU = jnp.where(valid, jnp.clip(cols, 0, max(N - 1, 0)), 0)
+    nzmax_out = 2 * nu + M
+    cu = jnp.diff(A.indptr)                                  # upper per col
+    cl = jnp.bincount(jnp.where(valid, rU, N), length=N + 1)[:N]
+    out_ptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(cu + cl.astype(jnp.int32) + 1).astype(jnp.int32)]
+    )
+    slots = jnp.arange(nu, dtype=jnp.int32)
+    data = jnp.where(valid, A.data, 0.0)
+    # upper entries keep their within-column position
+    pos_u = out_ptr[cU] + (slots - A.indptr[cU])
+    pos_u = jnp.where(valid, pos_u, nzmax_out)
+    # the diagonal lands right after each column's upper block
+    ar = jnp.arange(M, dtype=jnp.int32)
+    pos_d = out_ptr[:-1][:M] + cu[:M]
+    # mirrored entries follow the upper triangle's CSR (row-major) order
+    order = jnp.argsort(rU, stable=True)                     # sentinels last
+    rs = rU[order]
+    q = slots - jnp.searchsorted(rs, rs, side="left").astype(jnp.int32)
+    pos_l = out_ptr[jnp.clip(rs, 0, max(N - 1, 0))] + cu[jnp.clip(rs, 0, max(N - 1, 0))] + 1 + q
+    pos_l = jnp.where(rs < M, pos_l, nzmax_out)
+    indices = (
+        jnp.full((nzmax_out,), M, jnp.int32)
+        .at[pos_u].set(rU.astype(jnp.int32), mode="drop")
+        .at[pos_d].set(ar, mode="drop")
+        .at[pos_l].set(cU[order].astype(jnp.int32), mode="drop")
+    )
+    vals = (
+        jnp.zeros((nzmax_out,), A.data.dtype)
+        .at[pos_u].set(data, mode="drop")
+        .at[pos_d].set(A.diag.astype(A.data.dtype), mode="drop")
+        .at[pos_l].set(data[order], mode="drop")
+    )
+    return CSC(data=vals, indices=indices, indptr=out_ptr,
+               nnz=(2 * A.nnz + M).astype(jnp.int32), shape=A.shape)
+
+
+def coo_to_symcsc(A: COO, *, nzmax: int | None = None,
+                  method: str = "jnp") -> SymCSC:
+    return csc_to_symcsc(coo_to_csc(A, nzmax=nzmax, method=method))
+
+
+# ---------------------------------------------------------------------------
+# BSR: small dense b x b blocks (vector-valued PDEs / MoE expert blocks)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    """Block-compressed format with dense ``b x b`` tiles, column-major
+    over blocks (a block-level CSC, matching the repo's column spine).
+
+    data    : float[nbmax, b, b] -- dense blocks, zero-filled partials
+    indices : int32[nbmax]       -- block rows; ``M//b`` sentinel in tail
+    indptr  : int32[Nb+1]        -- block-column pointer
+    nnz     : int32 scalar       -- structural block count
+    shape   : (M, N) static      -- both divisible by ``block``
+    block   : int static
+    """
+
+    data: jax.Array
+    indices: jax.Array
+    indptr: jax.Array
+    nnz: jax.Array
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+    @property
+    def nbmax(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def M(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.shape[1])
+
+    @property
+    def Mb(self) -> int:
+        return self.M // self.block
+
+    @property
+    def Nb(self) -> int:
+        return self.N // self.block
+
+    @property
+    def nnz_total(self):
+        """Stored scalar entries (dense blocks include explicit zeros)."""
+        return self.nnz * (self.block * self.block)
+
+    def to_dense(self) -> jax.Array:
+        b, Mb, Nb = self.block, self.Mb, self.Nb
+        bcols = slot_columns(self.indptr, self.nbmax)
+        valid = self.indices < Mb
+        r = jnp.where(valid, self.indices, 0)
+        c = jnp.where(valid, jnp.clip(bcols, 0, max(Nb - 1, 0)), 0)
+        v = jnp.where(valid[:, None, None], self.data, 0.0)
+        dense = jnp.zeros((Mb, Nb, b, b), self.data.dtype).at[r, c].add(v)
+        return dense.transpose(0, 2, 1, 3).reshape(self.M, self.N)
+
+
+def csc_to_bsr(A: CSC, *, block: int = 1) -> BSR:
+    """Group a plain CSC into dense blocks (host-side, like find).
+
+    Every occupied ``b x b`` block is materialised densely; entries the
+    CSC didn't store become explicit zeros (standard BSR fill-in).
+    """
+    b = int(block)
+    M, N = A.shape
+    if b < 1:
+        raise ValueError(f"block must be >= 1, got {b}")
+    if (b and M % b) or (b and N % b):
+        raise ValueError(
+            f"shape {A.shape} is not divisible by block={b}; "
+            "keep the plain 'csc' format or pick an aligned block size"
+        )
+    Mb, Nb = M // b, N // b
+    cols = np.asarray(slot_columns(A.indptr, A.nzmax))
+    r = np.asarray(A.indices)
+    v = np.asarray(A.data)
+    valid = r < M
+    r = r[valid].astype(np.int64)
+    c = cols[valid].clip(0, max(N - 1, 0)).astype(np.int64)
+    v = v[valid]
+    key = (c // b) * max(Mb, 1) + r // b
+    ukey, inv = np.unique(key, return_inverse=True)
+    nb = int(ukey.size)
+    data = np.zeros((nb, b, b), v.dtype)
+    data[inv, r % b, c % b] = v          # CSC entries are unique per (i, j)
+    ubr = (ukey % max(Mb, 1)).astype(np.int32)
+    ubc = (ukey // max(Mb, 1)).astype(np.int32)
+    counts = np.bincount(ubc, minlength=Nb)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return BSR(data=jnp.asarray(data), indices=jnp.asarray(ubr),
+               indptr=jnp.asarray(indptr), nnz=jnp.int32(nb),
+               shape=(M, N), block=b)
+
+
+def bsr_to_coo(A: BSR) -> COO:
+    b, Mb, Nb = A.block, A.Mb, A.Nb
+    bcols = slot_columns(A.indptr, A.nbmax)
+    valid = A.indices < Mb
+    br = jnp.where(valid, A.indices, 0)
+    bc = jnp.where(valid, jnp.clip(bcols, 0, max(Nb - 1, 0)), 0)
+    rl = jnp.arange(b, dtype=jnp.int32)
+    ok = valid[:, None, None]
+    shape3 = (A.nbmax, b, b)
+    rows = jnp.where(
+        ok, jnp.broadcast_to((br[:, None] * b + rl)[:, :, None], shape3), A.M)
+    cols = jnp.where(
+        ok, jnp.broadcast_to((bc[:, None] * b + rl)[:, None, :], shape3), 0)
+    vals = jnp.where(ok, A.data, 0.0)
+    return COO(rows=rows.reshape(-1).astype(jnp.int32),
+               cols=cols.reshape(-1).astype(jnp.int32),
+               vals=vals.reshape(-1), shape=A.shape)
+
+
+def bsr_to_csc(A: BSR) -> CSC:
+    """Direct demotion: sort-free scatter, pure pointer arithmetic.
+
+    Within block-column ``bc`` the stored blocks are already ordered by
+    block row, so scalar column ``j = bc*b + cl`` receives its entries
+    in order by walking the blocks; every output slot is computable
+    from (block position, local row, local col) without a sort.
+    """
+    b, M, N = A.block, A.M, A.N
+    Mb, Nb = A.Mb, A.Nb
+    nbmax = A.nbmax
+    bcols = slot_columns(A.indptr, nbmax)
+    valid = A.indices < Mb
+    cnt = jnp.diff(A.indptr)                       # blocks per block-col
+    nzmax_out = nbmax * b * b
+    bc = jnp.clip(bcols, 0, max(Nb - 1, 0))
+    q = jnp.arange(nbmax, dtype=jnp.int32) - A.indptr[bc]   # pos in bcol
+    rl = jnp.arange(b, dtype=jnp.int32)
+    # slot(s, rl, cl) = indptr[bc]*b^2 + cl*cnt[bc]*b + q*b + rl
+    pos = ((A.indptr[bc] * (b * b) + q * b)[:, None, None]
+           + rl[None, :, None]
+           + (cnt[bc] * b)[:, None, None] * rl[None, None, :])
+    ok = valid[:, None, None]
+    pos = jnp.where(ok, pos, nzmax_out)
+    rows = jnp.broadcast_to(
+        (A.indices[:, None] * b + rl[None, :])[:, :, None], (nbmax, b, b)
+    )
+    indices = jnp.full((nzmax_out,), M, jnp.int32).at[pos.reshape(-1)].set(
+        jnp.where(ok, rows, M).reshape(-1).astype(jnp.int32), mode="drop")
+    data = jnp.zeros((nzmax_out,), A.data.dtype).at[pos.reshape(-1)].set(
+        jnp.where(ok, A.data, 0.0).reshape(-1), mode="drop")
+    # scalar column pointer: col j = bc*b + cl starts at
+    # indptr[bc]*b^2 + cl*cnt[bc]*b
+    jbc = jnp.repeat(jnp.arange(Nb, dtype=jnp.int32), b)
+    jcl = jnp.tile(jnp.arange(b, dtype=jnp.int32), Nb)
+    starts = A.indptr[jbc] * (b * b) + jcl * cnt[jbc] * b
+    indptr = jnp.concatenate(
+        [starts.astype(jnp.int32),
+         (A.indptr[Nb] * (b * b))[None].astype(jnp.int32)]
+    )
+    return CSC(data=data, indices=indices, indptr=indptr,
+               nnz=(A.nnz * (b * b)).astype(jnp.int32), shape=A.shape)
+
+
+def coo_to_bsr(A: COO, *, block: int = 1, nzmax: int | None = None,
+               method: str = "jnp") -> BSR:
+    return csc_to_bsr(coo_to_csc(A, nzmax=nzmax, method=method), block=block)
+
+
 register_format("coo", COO)
 register_format("csc", CSC)
 register_format("csr", CSR)
+register_format("symcsc", SymCSC)
+register_format("bsr", BSR)
 register_converter(CSC, "coo", csc_to_coo)
 register_converter(CSR, "coo", csr_to_coo)
 register_converter(COO, "csc", coo_to_csc)
 register_converter(COO, "csr", coo_to_csr)
 register_converter(CSC, "csr", csc_to_csr)
 register_converter(CSR, "csc", csr_to_csc)
+register_converter(SymCSC, "coo", symcsc_to_coo)
+register_converter(SymCSC, "csc", symcsc_to_csc)
+register_converter(CSC, "symcsc", csc_to_symcsc)
+register_converter(COO, "symcsc", coo_to_symcsc)
+register_converter(BSR, "coo", bsr_to_coo)
+register_converter(BSR, "csc", bsr_to_csc)
+register_converter(CSC, "bsr", csc_to_bsr)
+register_converter(COO, "bsr", coo_to_bsr)

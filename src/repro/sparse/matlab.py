@@ -26,7 +26,8 @@ from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, slot_columns
 from .dispatch import resolve_method
 from .lru import LRUCache
-from .pattern import SparsePattern, plan_coo, validate_accum
+from .pattern import (SparsePattern, plan_coo, plan_symmetric,
+                      validate_accum)
 
 
 def expand_indices(ii, jj, ss):
@@ -79,7 +80,8 @@ def expand_indices(ii, jj, ss):
 
 def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
             *, method: str | None = None, mesh=None, accum: str = "sum",
-            nzmax_slack: int = 0):
+            nzmax_slack: int = 0, format: str | None = None,
+            block: int = 1):
     """Assemble a sparse matrix from Matlab-style triplet data.
 
     >>> import numpy as np
@@ -107,19 +109,41 @@ def fsparse(ii, jj, ss, shape=None, nzmax: int | None = None,
     ``convert(S, "csc")`` for the Matlab layout.  ``accum`` selects how
     duplicate (i, j) values combine (``repro.sparse.ACCUM_MODES`` —
     Matlab's ``sparse`` sums; the rest are ``accumarray`` reductions).
+
+    ``format="symcsc"`` assembles through the *halved* symmetric plan
+    (:func:`~repro.sparse.pattern.plan_symmetric`): the structure must
+    be pairwise symmetric (verified; a clear error names the plain-CSC
+    fallback otherwise) and the duplicate-summed values must be too —
+    the FEM element-matrix contract; only strict-upper + diagonal
+    values are streamed, half the full fill.  ``format="bsr"``
+    assembles a plain CSC and groups it into dense ``block x block``
+    tiles.  Both compose with ``method=`` planning backends; neither
+    supports ``method="sharded"`` (clear error).
     """
     method = method if method == "sharded" else resolve_method(method)
     validate_accum(accum)
+    _validate_format(format, block)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     if method == "sharded":
+        _reject_sharded_format(format)
         _reject_sharded_accum(accum)
         _reject_sharded_slack(nzmax_slack)
         pat = _plan_sharded_coo(coo, nzmax, mesh)
         return pat.assemble(coo.vals)
     _reject_unused_mesh(mesh, method)
-    return plan_coo(coo, nzmax=nzmax, method=method, accum=accum,
-                    nzmax_slack=nzmax_slack).assemble(coo.vals)
+    if format == "symcsc":
+        spat = plan_symmetric(np.asarray(coo.rows), np.asarray(coo.cols),
+                              coo.shape, nzmax=nzmax, method=method,
+                              accum=accum)
+        return spat.assemble(coo.vals)
+    out = plan_coo(coo, nzmax=nzmax, method=method, accum=accum,
+                   nzmax_slack=nzmax_slack).assemble(coo.vals)
+    if format == "bsr":
+        from .formats import convert
+
+        return convert(out, "bsr", block=block)
+    return out
 
 
 def _reject_unused_mesh(mesh, method):
@@ -127,6 +151,32 @@ def _reject_unused_mesh(mesh, method):
         raise ValueError(
             f"mesh= is only meaningful with method='sharded' "
             f"(got method={method!r}); the mesh would be silently ignored"
+        )
+
+
+def _validate_format(format, block):
+    if format not in (None, "symcsc", "bsr"):
+        raise ValueError(
+            f"unknown assembly format {format!r}; expected None "
+            "(plain CSC), 'symcsc' or 'bsr'"
+        )
+    if int(block) < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    if format != "bsr" and int(block) != 1:
+        raise ValueError(
+            f"block={block} is only meaningful with format='bsr' "
+            f"(got format={format!r}); it would be silently ignored"
+        )
+
+
+def _reject_sharded_format(format):
+    if format is not None:
+        raise NotImplementedError(
+            f"format={format!r} is not supported with method='sharded': "
+            "ShardedPattern routes and plans the full triplet stream per "
+            "row block and knows nothing about symmetry or block tiles; "
+            "fall back to the plain-CSC sharded path (format=None) and "
+            "convert() the gathered result instead"
         )
 
 
@@ -203,7 +253,8 @@ def _cache_key(rows: np.ndarray, cols: np.ndarray, shape, nzmax, method,
 
 def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
                 *, method: str | None = None, mesh=None,
-                accum: str = "sum", nzmax_slack: int = 0):
+                accum: str = "sum", nzmax_slack: int = 0,
+                format: str | None = None, block: int = 1):
     """The shared symbolic phase behind ``sparse2`` and the PlanService.
 
     Validates/expands the Matlab-style request, resolves its cache key
@@ -219,6 +270,7 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
     """
     method = method if method == "sharded" else resolve_method(method)
     validate_accum(accum)
+    _validate_format(format, block)
     ii, jj, ss = expand_indices(ii, jj, ss)
     coo = coo_from_matlab(ii, jj, ss, shape=shape)
     if nzmax is None and nzmax_slack and method != "sharded":
@@ -227,6 +279,7 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
     if method == "sharded":
         from .sharded import mesh_fingerprint, resolve_mesh
 
+        _reject_sharded_format(format)
         _reject_sharded_accum(accum)
         _reject_sharded_slack(nzmax_slack)
         mesh = resolve_mesh(mesh)
@@ -234,13 +287,20 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
     else:
         _reject_unused_mesh(mesh, method)
     # accum is part of the plan (a static SparsePattern field), so it is
-    # part of the cache identity too
+    # part of the cache identity too; so are the target format and its
+    # block size — a SymPattern and a SparsePattern over the same
+    # triplets are different resident plans
     key = _cache_key(np.asarray(coo.rows), np.asarray(coo.cols),
-                     coo.shape, nzmax, method, (accum,) + tuple(extra))
+                     coo.shape, nzmax, method,
+                     (accum, format, int(block)) + tuple(extra))
 
     def build():
         if method == "sharded":
             return _plan_sharded_coo(coo, nzmax, mesh)
+        if format == "symcsc":
+            return plan_symmetric(np.asarray(coo.rows),
+                                  np.asarray(coo.cols), coo.shape,
+                                  nzmax=nzmax, method=method, accum=accum)
         return plan_coo(coo, nzmax=nzmax, method=method, accum=accum)
 
     return key, _PLAN_CACHE.get_or_create(key, build), coo
@@ -248,7 +308,8 @@ def plan_lookup(ii, jj, ss, shape=None, nzmax: int | None = None,
 
 def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
             *, method: str | None = None, mesh=None, accum: str = "sum",
-            nzmax_slack: int = 0):
+            nzmax_slack: int = 0, format: str | None = None,
+            block: int = 1):
     """``fsparse`` with symbolic-plan reuse across calls.
 
     Same contract and results as :func:`fsparse`; repeated calls whose
@@ -260,11 +321,24 @@ def sparse2(ii, jj, ss, shape=None, nzmax: int | None = None,
     ``method="sharded"`` caches :class:`~repro.sparse.sharded.ShardedPattern`
     plans the same way (keyed additionally on the mesh), so repeated
     distributed assembly pays routing + per-block analysis once.
+
+    ``format="symcsc"`` caches the *halved*
+    :class:`~repro.sparse.pattern.SymPattern` (strict-upper + diagonal
+    slots only) so every refill streams half the values;
+    ``format="bsr"`` caches the plain plan and groups each assembled
+    result into dense ``block x block`` tiles.  The format (and block)
+    are part of the cache key.
     """
     _, pat, coo = plan_lookup(ii, jj, ss, shape, nzmax, method=method,
                               mesh=mesh, accum=accum,
-                              nzmax_slack=nzmax_slack)
-    return pat.assemble(coo.vals)
+                              nzmax_slack=nzmax_slack, format=format,
+                              block=block)
+    out = pat.assemble(coo.vals)
+    if format == "bsr":
+        from .formats import convert
+
+        return convert(out, "bsr", block=block)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -328,8 +402,11 @@ def plan_update(ii, jj, ss, add_ii, add_jj, add_ss, shape=None,
         nzmax = L + int(nzmax_slack)
     rows_b = np.asarray(coo.rows)
     cols_b = np.asarray(coo.cols)
+    # extras mirror plan_lookup's plain-CSC identity (format=None,
+    # block=1): delta updates only refine plain plans, and the keys
+    # must collide with the ones sparse2/assemble recorded
     old_key = _cache_key(rows_b, cols_b, coo.shape, nzmax, method,
-                         (accum,))
+                         (accum, None, 1))
     base = _PLAN_CACHE.get_or_create(
         old_key,
         lambda: plan_coo(coo, nzmax=nzmax, method=method, accum=accum),
@@ -355,7 +432,7 @@ def plan_update(ii, jj, ss, add_ii, add_jj, add_ss, shape=None,
     if new_pat is base:  # no-op update: nothing moved, nothing retired
         return PlanUpdate(old_key, base, new_coo, old_key, base)
     new_key = _cache_key(rows_cat, cols_cat, coo.shape, new_pat.nzmax,
-                         method, (accum,))
+                         method, (accum, None, 1))
     _PLAN_CACHE.pop(old_key)
     new_pat = _PLAN_CACHE.insert(new_key, new_pat)
     from .spgemm import _structure_key, retire_structure
@@ -400,13 +477,20 @@ def plan_cache_clear() -> None:
 # ---------------------------------------------------------------------------
 # Matlab query helpers
 # ---------------------------------------------------------------------------
-def find(S: CSC):
+def find(S):
     """Matlab ``[i, j, v] = find(S)``: unit-offset triplets of nonzeros.
 
     Host-side (numpy) — the columnwise, row-ascending order matches
     Matlab's.  Structural zeros (cancelled duplicates) are reported,
-    exactly like fsparse/sparse keep them.
+    exactly like fsparse/sparse keep them.  Non-CSC formats (SymCSC,
+    BSR, CSR, COO, ...) convert through the format registry first, so
+    ``find`` reports the *expanded* structure (a SymCSC's mirrored
+    lower triangle and dense diagonal included).
     """
+    if not isinstance(S, CSC):
+        from .formats import convert
+
+        S = convert(S, "csc")
     nnz = int(S.nnz)
     cols = np.asarray(slot_columns(S.indptr, S.nzmax))[:nnz]
     rows = np.asarray(S.indices)[:nnz]
@@ -440,6 +524,11 @@ def nnz_of(S) -> int:
 
     Accepts any registered format whose ``nnz`` is a scalar or (for
     block-partitioned formats like ``ShardedCSC``) a per-block vector;
-    blocks partition the matrix, so the counts sum.
+    blocks partition the matrix, so the counts sum.  Formats that store
+    a compressed half/blocked structure (SymCSC, BSR) expose the
+    Matlab-visible expanded count as ``nnz_total`` — preferred here.
     """
+    total = getattr(S, "nnz_total", None)
+    if total is not None:
+        return int(np.asarray(total))
     return int(np.sum(np.asarray(S.nnz)))

@@ -76,7 +76,7 @@ import jax.numpy as jnp
 
 from ..core.coo import COO
 from ..core.csc import CSC, slot_columns, spmv as _csc_spmv
-from .formats import CSR, convert, format_of
+from .formats import BSR, CSR, SymCSC, convert, format_of
 from .pattern import fill_dtype
 
 __all__ = [
@@ -148,6 +148,95 @@ def _csr_spmv(A: CSR, x: jax.Array) -> jax.Array:
 
 def _sharded_spmv(A, x: jax.Array) -> jax.Array:
     return A.spmv(x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmv_sym_vjp(shape, diag, data, indices, indptr, x):
+    """Fused both-triangles symmetric SpMV with an explicit sparse VJP.
+
+    Symmetric SpMV is self-transpose, so ``∂L/∂x = A g`` reuses the
+    *same* fused kernel (no spmv_t dual, no dense intermediate);
+    ``∂L/∂data[s] = x[col_s]·g[row_s] + x[row_s]·g[col_s]`` (the stored
+    upper entry appears in both triangles) and ``∂L/∂diag = x · g`` —
+    all O(nzmax) gathers through the halved structure.
+    """
+    from ..kernels.spmv_sym.ops import spmv_sym
+
+    return spmv_sym(diag, data, indices, indptr, x)
+
+
+def _spmv_sym_fwd(shape, diag, data, indices, indptr, x):
+    y = _spmv_sym_vjp(shape, diag, data, indices, indptr, x)
+    return y, (diag, data, indices, indptr, x)
+
+
+def _spmv_sym_bwd(shape, res, g):
+    diag, data, indices, indptr, x = res
+    M = int(shape[0])
+    g_x = _spmv_sym_vjp(shape, diag, data, indices, indptr, g)
+    g_diag = (x * g).astype(diag.dtype)
+    cols = slot_columns(indptr, data.shape[-1])
+    valid = indices < M
+    r = jnp.where(valid, indices, 0)
+    c = jnp.where(valid, jnp.clip(cols, 0, max(M - 1, 0)), 0)
+    g_data = jnp.where(
+        valid, x[c] * g[r] + x[r] * g[c], jnp.zeros((), data.dtype)
+    ).astype(data.dtype)
+    return (g_diag, g_data, None, None, g_x)
+
+
+_spmv_sym_vjp.defvjp(_spmv_sym_fwd, _spmv_sym_bwd)
+
+
+def _symcsc_spmv(A: SymCSC, x: jax.Array) -> jax.Array:
+    return _spmv_sym_vjp(A.shape, A.diag, A.data, A.indices, A.indptr, x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmv_bsr_vjp(shape, block, data, indices, indptr, x):
+    """Blocked SpMV with a sparse VJP through the stored tiles.
+
+    ``∂L/∂x`` scatter-adds ``data[k]ᵀ @ g_block[row_k]`` per stored
+    block into block *columns* (the Aᵀ product without materializing a
+    transpose) and ``∂L/∂data[k] = g_block[row_k] ⊗ x_block[col_k]`` —
+    both O(nbmax · b²) like the forward.
+    """
+    from ..kernels.spmv_sym.ops import spmv_bsr
+
+    return spmv_bsr(data, indices, indptr, x, shape=shape, block=block)
+
+
+def _spmv_bsr_fwd(shape, block, data, indices, indptr, x):
+    y = _spmv_bsr_vjp(shape, block, data, indices, indptr, x)
+    return y, (data, indices, indptr, x)
+
+
+def _spmv_bsr_bwd(shape, block, res, g):
+    data, indices, indptr, x = res
+    M, N = int(shape[0]), int(shape[1])
+    b = int(block)
+    Mb, Nb = M // b, N // b
+    nbmax = data.shape[0]
+    bcols = slot_columns(indptr, nbmax)
+    valid = indices < Mb
+    br = jnp.where(valid, indices, 0)
+    bc = jnp.where(valid, jnp.clip(bcols, 0, max(Nb - 1, 0)), 0)
+    gb = g.reshape(Mb, b)[br]                              # [nbmax, b]
+    xb = x.reshape(Nb, b)[bc]                              # [nbmax, b]
+    ok = valid[:, None]
+    g_data = jnp.where(
+        valid[:, None, None], jnp.einsum("ki,kj->kij", gb, xb), 0
+    ).astype(data.dtype)
+    contrib = jnp.where(ok, jnp.einsum("kij,ki->kj", data, gb), 0)
+    g_x = jnp.zeros((Nb, b), contrib.dtype).at[bc].add(contrib)
+    return (g_data, None, None, g_x.reshape(N).astype(x.dtype))
+
+
+_spmv_bsr_vjp.defvjp(_spmv_bsr_fwd, _spmv_bsr_bwd)
+
+
+def _bsr_spmv(A: BSR, x: jax.Array) -> jax.Array:
+    return _spmv_bsr_vjp(A.shape, A.block, A.data, A.indices, A.indptr, x)
 
 
 def _spgemm(A, B) -> CSC:
@@ -235,10 +324,47 @@ def _coo_transpose(A: COO) -> COO:
     )
 
 
+def _symcsc_transpose(A: SymCSC) -> SymCSC:
+    # A == Aᵀ by construction: the transpose is the SAME object (epoch,
+    # structure identity and any caches keyed on it are preserved).
+    return A
+
+
+def _bsr_transpose(A: BSR) -> BSR:
+    """Direct BSR transpose: one stable block sort + per-tile swap.
+
+    The same single-stable-sort argument as ``_resort_compressed``:
+    the stored block stream is (block-col, block-row) lexicographic, so
+    one stable argsort by block row yields the transposed order; each
+    dense tile transposes in registers.  Zeroed invalid tails make the
+    double transpose bit-identical.
+    """
+    b, Mb, Nb = A.block, A.Mb, A.Nb
+    bcols = slot_columns(A.indptr, A.nbmax)
+    valid = A.indices < Mb
+    order = jnp.argsort(A.indices, stable=True)   # sentinels sink last
+    counts = jnp.bincount(
+        jnp.where(valid, A.indices, Mb), length=Mb + 1
+    )[:Mb].astype(jnp.int32)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    data = jnp.where(
+        valid[:, None, None], jnp.swapaxes(A.data, 1, 2), 0.0
+    )[order]
+    indices = jnp.where(
+        valid, jnp.clip(bcols, 0, max(Nb - 1, 0)), Nb
+    )[order].astype(jnp.int32)
+    return BSR(data=data, indices=indices, indptr=indptr, nnz=A.nnz,
+               shape=(A.N, A.M), block=b)
+
+
 def transpose(A):
     """``Aᵀ``.  CSC <-> CSR is a zero-cost array reinterpretation;
-    COO swaps its index vectors; block-partitioned formats fall back to
-    the COO hub (a block-row partition has no block-col dual)."""
+    COO swaps its index vectors; SymCSC returns the same object
+    (``A == Aᵀ``); BSR resorts its block stream directly;
+    block-partitioned formats fall back to the COO hub (a block-row
+    partition has no block-col dual)."""
     fn, A = _dispatch("transpose", A, hub="coo")
     return fn(A)
 
@@ -273,16 +399,28 @@ def add(A, B):
     if fmt == "coo":
         return out
     kwargs = {"mesh": A.mesh} if fmt == "sharded" else {}
+    if fmt == "bsr":
+        kwargs = {"block": A.block}
     return convert(out, fmt, **kwargs)
 
 
 def scale(A, alpha):
     """``alpha * A`` — elementwise scale of the stored values, format
-    and structure preserved."""
+    and structure preserved.  SymCSC scales both of its numeric
+    streams (dense diagonal + strict upper)."""
+    if isinstance(A, SymCSC):
+        return dataclasses.replace(
+            A, diag=A.diag * alpha, data=A.data * alpha
+        )
     field = "vals" if isinstance(A, COO) else "data"
     return dataclasses.replace(
         A, **{field: getattr(A, field) * alpha}
     )
+
+
+def _symcsc_diagonal(A: SymCSC) -> jax.Array:
+    # the dense diagonal is stored outright — zero work
+    return A.diag
 
 
 def _coo_diagonal(A: COO) -> jax.Array:
@@ -357,7 +495,12 @@ register_op("spmv", "csc", _csc_spmv)
 register_op("spmv", "csr", _csr_spmv)
 register_op("spmv", "coo", _coo_spmv)
 register_op("spmv", "sharded", _sharded_spmv)
+register_op("spmv", "symcsc", _symcsc_spmv)
+register_op("spmv", "bsr", _bsr_spmv)
 register_op("transpose", "csc", _csc_transpose)
 register_op("transpose", "csr", _csr_transpose)
 register_op("transpose", "coo", _coo_transpose)
+register_op("transpose", "symcsc", _symcsc_transpose)
+register_op("transpose", "bsr", _bsr_transpose)
 register_op("diagonal", "coo", _coo_diagonal)
+register_op("diagonal", "symcsc", _symcsc_diagonal)

@@ -801,3 +801,200 @@ def plan_coo(coo: COO, *, nzmax: int | None = None,
     """``plan`` over a :class:`repro.core.COO` container."""
     return plan(coo.rows, coo.cols, coo.shape, nzmax=nzmax, method=method,
                 accum=accum, nzmax_slack=nzmax_slack)
+
+
+# ---------------------------------------------------------------------------
+# Plan-time structure detection (symmetry / block alignment)
+# ---------------------------------------------------------------------------
+def detect_symmetry(rows, cols, shape) -> bool:
+    """Pairwise structural symmetry of the (deduplicated) triplets.
+
+    Host-side like the facade's pre-processing: one dedup of the valid
+    ``col*M + row`` keys, then an O(L) mirrored-key membership check
+    (structure is a *set*, so "every mirror present" is exactly
+    symmetry).  ``row == M`` sentinels are ignored.
+    """
+    M, N = int(shape[0]), int(shape[1])
+    if M != N:
+        return False
+    r = np.asarray(rows).astype(np.int64).ravel()
+    c = np.asarray(cols).astype(np.int64).ravel()
+    keep = (r >= 0) & (r < M) & (c >= 0) & (c < N)
+    r, c = r[keep], c[keep]
+    if r.size == 0:
+        return True
+    key = np.unique(c * M + r)
+    mkey = (key % M) * M + key // M
+    pos = np.searchsorted(key, mkey).clip(0, key.size - 1)
+    return bool(np.all(key[pos] == mkey))
+
+
+def pattern_symmetric(pat: SparsePattern) -> bool:
+    """Symmetry of an existing plan via the resident sorted stream.
+
+    The deduplicated structure is the ``first``-flagged subsequence of
+    the already-sorted ``(scols, srows)`` stream, so each mirror
+    resolves with one :func:`~repro.sparse.dispatch.merge_search`
+    probe — the same O(L) machinery the delta merge uses, no re-sort.
+    """
+    M, N = pat.shape
+    if M != N:
+        return False
+    first = np.asarray(pat.first)
+    srows = np.asarray(pat.srows)[first]
+    scols = np.asarray(pat.scols)[first]
+    keep = srows < M
+    srows, scols = srows[keep], scols[keep]
+    if srows.size == 0:
+        return True
+    t_rows = jnp.asarray(srows)
+    t_cols = jnp.asarray(scols)
+    # probe the mirrored pairs: (row, col) swapped; present iff the
+    # right/left insertion offsets differ by exactly one
+    lo = merge_search(t_cols, t_rows, t_rows, t_cols, side="left")
+    hi = merge_search(t_cols, t_rows, t_rows, t_cols, side="right")
+    return bool(np.all(np.asarray(hi) - np.asarray(lo) == 1))
+
+
+def detect_block(rows, cols, shape, *, candidates=(8, 4, 2)) -> int:
+    """Largest aligned block size whose occupied blocks are fully dense.
+
+    Returns the largest ``b`` in ``candidates`` dividing both matrix
+    dimensions for which every occupied ``b x b`` block contains all
+    ``b*b`` structural entries (so BSR stores no fill-in zeros), else 1.
+    """
+    M, N = int(shape[0]), int(shape[1])
+    r = np.asarray(rows).astype(np.int64).ravel()
+    c = np.asarray(cols).astype(np.int64).ravel()
+    keep = (r >= 0) & (r < M) & (c >= 0) & (c < N)
+    key = np.unique(c[keep] * max(M, 1) + r[keep])
+    if key.size == 0:
+        return 1
+    rr, cc = key % max(M, 1), key // max(M, 1)
+    for b in sorted(set(int(x) for x in candidates), reverse=True):
+        if b <= 1 or M % b or N % b:
+            continue
+        bkey = (cc // b) * (M // b) + rr // b
+        _, counts = np.unique(bkey, return_counts=True)
+        if np.all(counts == b * b):
+            return b
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# SymPattern: the halved symmetric plan (strict-upper + diagonal slots)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SymPattern:
+    """Halved assembly plan for a structurally symmetric matrix.
+
+    Only the strict-upper triplets are planned (``upat``) and only the
+    diagonal triplets get a dense scatter — so every ``assemble``
+    refill streams *half* the values a full-plan refill would, and the
+    resulting :class:`~repro.sparse.formats.SymCSC` feeds the fused
+    both-triangles SpMV directly.
+
+    Contract: the input stream must be pairwise value-symmetric after
+    duplicate summation (FEM element matrices are — each element
+    contribution is itself symmetric).  :func:`plan_symmetric` verifies
+    the *structure*; value symmetry is the caller's invariant, exactly
+    like Matlab's ``issymmetric`` pre-check before a symmetric solver.
+
+    usel : int32[Lu]  input positions of strict-upper triplets
+    dsel : int32[Ld]  input positions of diagonal triplets
+    drow : int32[Ld]  their (equal) row == col indices
+    """
+
+    upat: SparsePattern
+    usel: jax.Array
+    dsel: jax.Array
+    drow: jax.Array
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    L: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def nzmax(self) -> int:
+        """Strict-upper capacity (the halved resident plan)."""
+        return self.upat.nzmax
+
+    @property
+    def epoch(self) -> int:
+        return self.upat.epoch
+
+    @property
+    def nnz(self):
+        return self.upat.nnz
+
+    def assemble(self, vals: jax.Array):
+        """Half-stream numeric fill -> :class:`SymCSC`.
+
+        Gathers the ``Lu`` upper values through the halved plan and
+        scatter-adds the ``Ld`` diagonal values into the dense ``diag``
+        (f32 accumulation per the :func:`accum_dtype` contract).
+        """
+        from .formats import SymCSC
+
+        if vals.ndim != 1 or int(vals.shape[0]) != self.L:
+            raise ValueError(
+                f"expected a length-{self.L} value vector aligned with "
+                f"the planned triplets, got shape {tuple(vals.shape)}"
+            )
+        dtype = fill_dtype(vals)
+        v = vals.astype(dtype)
+        upper = self.upat.assemble(v[self.usel])
+        acc = accum_dtype(dtype)
+        diag = (
+            jnp.zeros((self.shape[0],), acc)
+            .at[self.drow].add(v[self.dsel].astype(acc), mode="drop")
+            .astype(dtype)
+        )
+        return SymCSC(diag=diag, data=upper.data, indices=upper.indices,
+                      indptr=upper.indptr, nnz=upper.nnz, shape=self.shape)
+
+
+def plan_symmetric(
+    rows,
+    cols,
+    shape: tuple[int, int],
+    *,
+    nzmax: int | None = None,
+    method: str | None = None,
+    accum: str = "sum",
+) -> SymPattern:
+    """Symbolic phase for a structurally symmetric stream.
+
+    Verifies pairwise symmetry (``ValueError`` naming the plain-CSC
+    fallback otherwise), splits the stream into strict-upper and
+    diagonal triplets host-side, and plans only the upper half — the
+    resident plan and every refill move half the bytes.  Host-side like
+    the facade (the split is data-dependent); the returned
+    :class:`SymPattern` assembles under ``jit`` like any plan.
+    """
+    M, N = int(shape[0]), int(shape[1])
+    if M != N:
+        raise ValueError(
+            f"plan_symmetric requires a square matrix, got {shape}; "
+            "use plan() for the plain-CSC fallback"
+        )
+    if accum != "sum":
+        raise NotImplementedError(
+            f"plan_symmetric supports accum='sum' only (got {accum!r}); "
+            "use plan() for the plain-CSC fallback"
+        )
+    r = np.asarray(rows).astype(np.int32).ravel()
+    c = np.asarray(cols).astype(np.int32).ravel()
+    if not detect_symmetry(r, c, shape):
+        raise ValueError(
+            "the (deduplicated) structure is not pairwise symmetric — "
+            "some entry (i, j) lacks a mirror (j, i); use plan() for "
+            "the plain-CSC fallback"
+        )
+    valid = (r >= 0) & (r < M) & (c >= 0) & (c < N)
+    usel = np.nonzero(valid & (r < c))[0].astype(np.int32)
+    dsel = np.nonzero(valid & (r == c))[0].astype(np.int32)
+    upat = plan(jnp.asarray(r[usel]), jnp.asarray(c[usel]), (M, N),
+                nzmax=nzmax, method=method)
+    return SymPattern(upat=upat, usel=jnp.asarray(usel),
+                      dsel=jnp.asarray(dsel), drow=jnp.asarray(r[dsel]),
+                      shape=(M, N), L=int(r.shape[0]))

@@ -73,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.csc import CSC
-from .formats import CSR, convert
+from .formats import convert
 from .lru import LRUCache
 from .matlab import plan_cache_info, plan_lookup, plan_update, _PLAN_CACHE
 from .ops import matmul as _ops_matmul, spmv_impl
@@ -94,6 +94,16 @@ __all__ = [
     "save_caches",
     "tcmalloc_hint",
 ]
+
+#: numeric (re-bindable) fields per flat compressed format, keyed by
+#: class name; everything else (e.g. sharded block formats) falls back
+#: to the ordinary ``ops.matmul`` dispatch in :meth:`PlanService.spmv`.
+_SPMV_NUMERIC_FIELDS = {
+    "CSC": ("data",),
+    "CSR": ("data",),
+    "BSR": ("data",),
+    "SymCSC": ("diag", "data"),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -573,27 +583,31 @@ class PlanService:
                 f"spmv expects a vector or matrix, got ndim={x.ndim}"
             )
         fn, Sr = spmv_impl(S)
-        if not isinstance(Sr, (CSC, CSR)):
+        fields = _SPMV_NUMERIC_FIELDS.get(type(Sr).__name__)
+        if fields is None or not hasattr(Sr, "indices"):
             return _ops_matmul(Sr, x)
         from .spgemm import _structure_key
 
+        nums = tuple(getattr(Sr, f) for f in fields)
         ekey = ("spmv", type(Sr).__name__, _structure_key(Sr),
-                Sr.data.dtype.str, tuple(x.shape), x.dtype.str)
+                tuple(n.dtype.str for n in nums),
+                getattr(Sr, "block", None), tuple(x.shape), x.dtype.str)
 
         def build():
-            def f(data, xv):
-                A = dataclasses.replace(Sr, data=data)
+            def f(*args):
+                *vals, xv = args
+                A = dataclasses.replace(Sr, **dict(zip(fields, vals)))
                 if xv.ndim == 1:
                     return fn(A, xv)
                 return jax.vmap(lambda col: fn(A, col),
                                 in_axes=1, out_axes=1)(xv)
 
             return jax.jit(f).lower(
-                jax.ShapeDtypeStruct(Sr.data.shape, Sr.data.dtype),
+                *(jax.ShapeDtypeStruct(n.shape, n.dtype) for n in nums),
                 jax.ShapeDtypeStruct(x.shape, x.dtype),
             ).compile()
 
-        return self._aot(ekey, build)(Sr.data, x)
+        return self._aot(ekey, build)(*nums, x)
 
     # -- introspection -----------------------------------------------------
     @staticmethod

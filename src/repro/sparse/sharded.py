@@ -411,6 +411,7 @@ def plan_sharded(
     capacity_factor: float = 2.0,
     nzmax: int | None = None,
     method: str | None = None,
+    symmetric: bool = False,
 ) -> ShardedPattern:
     """Run Phases A-C once; capture a reusable :class:`ShardedPattern`.
 
@@ -425,7 +426,22 @@ def plan_sharded(
     backend-aware production default; on TPU that is the Pallas radix
     planner, so the same kernels serve the single-device and per-shard
     sorts).
+
+    ``symmetric=True`` requests the halved strict-upper plan
+    (``plan_symmetric``'s contract) — not implemented for the sharded
+    path: the block-row partition would need a mirrored-entry router
+    so each half-entry reaches both owning blocks.  The request is
+    rejected *clearly* here instead of silently planning (and
+    streaming) the full mirrored stream twice.
     """
+    if symmetric:
+        raise NotImplementedError(
+            "plan_sharded(symmetric=True) is not supported: the "
+            "block-row partition has no mirrored-entry router yet, so "
+            "a symmetric plan would silently stream the full structure "
+            "twice; fall back to the plain-CSC sharded plan "
+            "(symmetric=False), or use plan_symmetric on one device"
+        )
     method = resolve_method(method)
     mesh = resolve_mesh(mesh, axis=axis)
     M, N = int(shape[0]), int(shape[1])

@@ -1,0 +1,466 @@
+"""SymCSC + BSR formats (PR 8): detection, halved plans, fused SpMV.
+
+Covers the symmetric/blocked format family end to end:
+
+- plan-time structure detection (``detect_symmetry`` /
+  ``pattern_symmetric`` / ``detect_block``), including the
+  hypothesis property that symmetrizing any stream makes it
+  detectable and breaking one mirror breaks it;
+- conversions through the registry (csc<->symcsc, csc<->bsr, the COO
+  hub legs) against dense oracles, plus the reject messages that name
+  the plain-CSC fallback;
+- the halved :class:`SymPattern` resident plan — strict-upper +
+  diagonal slots only — assembling bit-identically to the full plan;
+- the fused both-triangles SpMV (ref oracle, interpret-mode Pallas
+  kernels, format dispatch through ``ops.matmul``) and the BSR tile
+  kernel, with bit-identity on integer-valued data;
+- gradients through the symmetric ``custom_vjp`` (self-transpose) and
+  the BSR VJP vs dense autodiff oracles;
+- the Matlab facade (``fsparse(..., format=...)``, ``sparse2`` plan
+  cache keyed on format/block, ``find``/``nnz_of``) and the pinned
+  sharded rejects.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ransparse import dataset
+from repro.sparse import (
+    convert,
+    find,
+    fsparse,
+    ops,
+    plan,
+    plan_sharded,
+    plan_symmetric,
+    sparse2,
+)
+from repro.sparse.formats import BSR, CSC, SymCSC
+from repro.sparse.matlab import nnz_of, plan_cache_info
+from repro.sparse.pattern import (
+    SymPattern,
+    detect_block,
+    detect_symmetry,
+    pattern_symmetric,
+)
+from repro.kernels.spmv_sym import (
+    spmv_bsr,
+    spmv_bsr_ref,
+    spmv_sym,
+    spmv_sym_ref,
+)
+
+from hypothesis_compat import given, settings, st
+
+
+def _sym_triplets(seed=0, M=16, L=40):
+    """Unit-offset symmetrized integer-valued triplet stream."""
+    rng = np.random.default_rng(seed)
+    r0 = rng.integers(1, M + 1, L)
+    c0 = rng.integers(1, M + 1, L)
+    ii = np.concatenate([r0, c0])
+    jj = np.concatenate([c0, r0])
+    vv = np.ones(len(ii), np.float32)
+    return ii, jj, vv, M
+
+
+def _sym_csc(seed=0, M=16, L=40):
+    ii, jj, vv, M = _sym_triplets(seed, M, L)
+    return fsparse(ii, jj, vv, (M, M))
+
+
+# ---------------------------------------------------------------------------
+# detection
+# ---------------------------------------------------------------------------
+def test_detect_symmetry_basic():
+    ii, jj, _, M = _sym_triplets()
+    assert detect_symmetry(ii - 1, jj - 1, (M, M))
+    # rectangular can never be symmetric
+    assert not detect_symmetry(ii - 1, jj - 1, (M, M + 1))
+    # empty stream is trivially symmetric
+    assert detect_symmetry(np.array([], int), np.array([], int), (4, 4))
+
+
+def test_detect_symmetry_one_missing_mirror():
+    r = np.array([0, 1, 0])
+    c = np.array([1, 0, 2])  # (0, 2) has no (2, 0)
+    assert not detect_symmetry(r, c, (3, 3))
+    assert detect_symmetry(np.append(r, 2), np.append(c, 0), (3, 3))
+
+
+def test_pattern_symmetric_on_plans():
+    ii, jj, _, M = _sym_triplets()
+    sym = plan(np.asarray(ii - 1), np.asarray(jj - 1), (M, M))
+    assert pattern_symmetric(sym)
+    asym = plan(np.array([0, 1, 0]), np.array([1, 0, 2]), (3, 3))
+    assert not pattern_symmetric(asym)
+
+
+def test_detect_block():
+    b = 2
+    br = np.repeat(np.array([0, 1, 3]), b * b) * b + np.tile(
+        np.repeat(np.arange(b), b), 3)
+    bc = np.repeat(np.array([1, 0, 2]), b * b) * b + np.tile(
+        np.tile(np.arange(b), b), 3)
+    assert detect_block(br, bc, (8, 8)) == 2
+    # one entry knocked out of a block: no 2-alignment any more
+    assert detect_block(br[:-1], bc[:-1], (8, 8)) == 1
+    # scalar streams are block-1
+    assert detect_block(np.array([0, 5]), np.array([3, 1]), (8, 8)) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_property_symmetrized_streams_detected(data):
+    M = data.draw(st.integers(2, 24))
+    L = data.draw(st.integers(1, 60))
+    r0 = data.draw(st.lists(st.integers(0, M - 1), min_size=L,
+                            max_size=L))
+    c0 = data.draw(st.lists(st.integers(0, M - 1), min_size=L,
+                            max_size=L))
+    r = np.concatenate([np.array(r0), np.array(c0)])
+    c = np.concatenate([np.array(c0), np.array(r0)])
+    assert detect_symmetry(r, c, (M, M))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_property_one_flip_breaks_detection(data):
+    M = data.draw(st.integers(4, 24))
+    L = data.draw(st.integers(1, 40))
+    r0 = data.draw(st.lists(st.integers(0, M - 1), min_size=L,
+                            max_size=L))
+    c0 = data.draw(st.lists(st.integers(0, M - 1), min_size=L,
+                            max_size=L))
+    r = np.concatenate([np.array(r0), np.array(c0)])
+    c = np.concatenate([np.array(c0), np.array(r0)])
+    # append a strictly-off-diagonal entry whose mirror is absent
+    occupied = set(zip(r.tolist(), c.tolist()))
+    extra = next(((i, j) for i in range(M) for j in range(M)
+                  if i != j and (i, j) not in occupied
+                  and (j, i) not in occupied), None)
+    if extra is None:  # stream already dense — nothing to break
+        return
+    r2 = np.append(r, extra[0])
+    c2 = np.append(c, extra[1])
+    assert not detect_symmetry(r2, c2, (M, M))
+
+
+# ---------------------------------------------------------------------------
+# conversions
+# ---------------------------------------------------------------------------
+def test_symcsc_round_trip_dense():
+    S = _sym_csc()
+    Y = convert(S, "symcsc")
+    assert isinstance(Y, SymCSC)
+    np.testing.assert_array_equal(np.asarray(Y.to_dense()),
+                                  np.asarray(S.to_dense()))
+    back = convert(Y, "csc")
+    assert isinstance(back, CSC)
+    np.testing.assert_array_equal(np.asarray(back.to_dense()),
+                                  np.asarray(S.to_dense()))
+    # expanded count: both triangles + the dense diagonal
+    assert int(np.asarray(Y.nnz_total)) == 2 * int(Y.nnz) + S.shape[0]
+
+
+def test_symcsc_via_coo_hub():
+    S = _sym_csc(seed=3)
+    R = convert(S, "csr")
+    Y = convert(R, "symcsc")  # csr -> coo hub -> symcsc
+    np.testing.assert_array_equal(np.asarray(Y.to_dense()),
+                                  np.asarray(S.to_dense()))
+    C = convert(Y, "coo")
+    np.testing.assert_array_equal(np.asarray(C.to_dense()),
+                                  np.asarray(S.to_dense()))
+
+
+def test_symcsc_rejects_name_plain_fallback():
+    with pytest.raises(ValueError, match="csc"):
+        convert(fsparse([1, 1], [1, 2], [1.0, 2.0], (2, 2)), "symcsc")
+    # symmetric structure, asymmetric values
+    with pytest.raises(ValueError, match="values are not symmetric"):
+        convert(fsparse([1, 2], [2, 1], [1.0, 2.0], (2, 2)), "symcsc")
+    # rectangular
+    with pytest.raises(ValueError, match="square"):
+        convert(fsparse([1], [1], [1.0], (2, 3)), "symcsc")
+
+
+def test_symcsc_empty():
+    E = fsparse([], [], [], (0, 0))
+    Y = convert(E, "symcsc")
+    assert Y.to_dense().shape == (0, 0)
+    assert int(np.asarray(Y.nnz_total)) == 0
+
+
+def test_bsr_round_trip_dense():
+    ii = np.array([1, 1, 2, 2, 3, 3, 4, 4])
+    jj = np.array([1, 2, 1, 2, 3, 4, 3, 4])
+    vv = np.arange(1.0, 9.0, dtype=np.float32)
+    S = fsparse(ii, jj, vv, (4, 4))
+    B = convert(S, "bsr", block=2)
+    assert isinstance(B, BSR) and B.block == 2
+    assert int(B.nnz) == 2  # two stored 2x2 blocks
+    assert int(np.asarray(B.nnz_total)) == 8
+    np.testing.assert_array_equal(np.asarray(B.to_dense()),
+                                  np.asarray(S.to_dense()))
+    back = convert(B, "csc")
+    np.testing.assert_array_equal(np.asarray(back.to_dense()),
+                                  np.asarray(S.to_dense()))
+
+
+def test_bsr_reject_misaligned_shape():
+    with pytest.raises(ValueError, match="divisible by block"):
+        convert(fsparse([1], [1], [1.0], (3, 4)), "bsr", block=2)
+
+
+def test_bsr_partial_blocks_stored_dense():
+    # a lone scalar entry still becomes one b x b block (zero-filled)
+    S = fsparse([1], [2], [5.0], (4, 4))
+    B = convert(S, "bsr", block=2)
+    assert int(B.nnz) == 1
+    np.testing.assert_array_equal(np.asarray(B.to_dense()),
+                                  np.asarray(S.to_dense()))
+
+
+# ---------------------------------------------------------------------------
+# halved plans
+# ---------------------------------------------------------------------------
+def test_plan_symmetric_halves_the_resident_plan():
+    ii, jj, vv, M = _sym_triplets(seed=5, M=20, L=60)
+    r, c = np.asarray(ii - 1), np.asarray(jj - 1)
+    full = plan(r, c, (M, M))
+    spat = plan_symmetric(r, c, (M, M))
+    assert isinstance(spat, SymPattern)
+    # strict-upper slots only: under half of the full plan's slots
+    assert int(spat.upat.nzmax) * 2 <= int(full.nzmax) + M
+    S = full.assemble(jnp.asarray(vv))
+    Y = spat.assemble(jnp.asarray(vv))
+    assert isinstance(Y, SymCSC)
+    np.testing.assert_array_equal(np.asarray(Y.to_dense()),
+                                  np.asarray(S.to_dense()))
+    # jit round trip
+    Yj = jax.jit(spat.assemble)(jnp.asarray(vv))
+    np.testing.assert_array_equal(np.asarray(Yj.to_dense()),
+                                  np.asarray(S.to_dense()))
+
+
+def test_plan_symmetric_rejects():
+    with pytest.raises(ValueError, match="plan\\(\\)"):
+        plan_symmetric(np.array([0, 1, 0]), np.array([1, 0, 2]), (3, 3))
+    with pytest.raises(ValueError, match="square"):
+        plan_symmetric(np.array([0]), np.array([0]), (2, 3))
+    with pytest.raises(NotImplementedError):
+        plan_symmetric(np.array([0, 1]), np.array([1, 0]), (2, 2),
+                       accum="max")
+
+
+# ---------------------------------------------------------------------------
+# fused SpMV: refs, kernels, dispatch
+# ---------------------------------------------------------------------------
+def test_spmv_sym_ref_matches_dense():
+    Y = convert(_sym_csc(seed=7, M=24, L=80), "symcsc")
+    x = jnp.asarray(np.random.default_rng(1).integers(0, 4, 24)
+                    .astype(np.float32))
+    y = spmv_sym_ref(Y.diag, Y.data, Y.indices, Y.indptr, x)
+    want = np.asarray(Y.to_dense()) @ np.asarray(x)
+    np.testing.assert_array_equal(np.asarray(y), want)
+
+
+def test_spmv_sym_kernel_interpret_matches_ref():
+    Y = convert(_sym_csc(seed=8, M=40, L=200), "symcsc")
+    x = jnp.asarray(np.random.default_rng(2).integers(0, 4, 40)
+                    .astype(np.float32))
+    ref = spmv_sym_ref(Y.diag, Y.data, Y.indices, Y.indptr, x)
+    ker = spmv_sym(Y.diag, Y.data, Y.indices, Y.indptr, x,
+                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+def test_spmv_bsr_ref_and_kernel():
+    ii = np.array([1, 1, 2, 2, 3, 3, 4, 4, 1, 1, 2, 2])
+    jj = np.array([1, 2, 1, 2, 3, 4, 3, 4, 3, 4, 3, 4])
+    vv = np.arange(1.0, 13.0, dtype=np.float32)
+    S = fsparse(ii, jj, vv, (4, 4))
+    B = convert(S, "bsr", block=2)
+    x = jnp.asarray(np.array([1, 2, 3, 4], np.float32))
+    want = np.asarray(S.to_dense()) @ np.asarray(x)
+    y_ref = spmv_bsr_ref(B.data, B.indices, B.indptr, x,
+                         shape=tuple(B.shape), block=B.block)
+    np.testing.assert_array_equal(np.asarray(y_ref), want)
+    y_ker = spmv_bsr(B.data, B.indices, B.indptr, x,
+                     shape=tuple(B.shape), block=B.block,
+                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_ker), want)
+
+
+def test_ops_matmul_bit_identical_across_formats_table42():
+    ii, jj, _, siz = dataset(1, seed=4, scale=0.004)
+    si = np.concatenate([ii, jj])
+    sj = np.concatenate([jj, ii])
+    S = fsparse(si, sj, np.ones(len(si), np.float32), (siz, siz))
+    Y = convert(S, "symcsc")
+    x = jnp.asarray(np.random.default_rng(9).integers(0, 4, siz)
+                    .astype(np.float32))
+    y_csc = ops.matmul(S, x)
+    np.testing.assert_array_equal(np.asarray(ops.matmul(Y, x)),
+                                  np.asarray(y_csc))
+    if siz % 2 == 0:
+        B = convert(S, "bsr", block=2)
+        np.testing.assert_array_equal(np.asarray(ops.matmul(B, x)),
+                                      np.asarray(y_csc))
+
+
+def test_transpose_symcsc_is_identity():
+    Y = convert(_sym_csc(seed=11), "symcsc")
+    assert ops.transpose(Y) is Y  # zero-cost: A == A.T by construction
+
+
+def test_symcsc_diagonal_scale_add():
+    S = _sym_csc(seed=12)
+    Y = convert(S, "symcsc")
+    dense = np.asarray(S.to_dense())
+    np.testing.assert_array_equal(np.asarray(ops.diagonal(Y)),
+                                  np.diag(dense))
+    np.testing.assert_array_equal(
+        np.asarray(ops.to_dense(ops.scale(Y, 3.0))), 3.0 * dense)
+    Z = ops.add(Y, Y)
+    np.testing.assert_array_equal(np.asarray(ops.to_dense(Z)),
+                                  2.0 * dense)
+
+
+def test_bsr_add_stays_blocked():
+    S = fsparse([1, 2], [1, 2], [1.0, 2.0], (4, 4))
+    B = convert(S, "bsr", block=2)
+    Z = ops.add(B, B)
+    assert isinstance(Z, BSR) and Z.block == 2
+    np.testing.assert_array_equal(np.asarray(ops.to_dense(Z)),
+                                  2.0 * np.asarray(S.to_dense()))
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+def test_symcsc_spmv_grad_matches_dense_oracle():
+    Y = convert(_sym_csc(seed=13, M=12, L=30), "symcsc")
+    x = jnp.asarray(np.random.default_rng(5).normal(size=12)
+                    .astype(np.float32))
+
+    def f_sparse(diag, data, xv):
+        import dataclasses
+        A = dataclasses.replace(Y, diag=diag, data=data)
+        return jnp.sum(ops.matmul(A, xv) ** 2)
+
+    def f_dense(diag, data, xv):
+        import dataclasses
+        A = dataclasses.replace(Y, diag=diag, data=data)
+        return jnp.sum((A.to_dense() @ xv) ** 2)
+
+    gs = jax.grad(f_sparse, argnums=(0, 1, 2))(Y.diag, Y.data, x)
+    gd = jax.grad(f_dense, argnums=(0, 1, 2))(Y.diag, Y.data, x)
+    for a, b, name in zip(gs, gd, ("diag", "data", "x")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_sympattern_shared_parameter_grad_matches_dense():
+    """Grad w.r.t. a shared upstream parameter agrees with the dense
+    oracle even though the halved fill reads only half the stream."""
+    ii, jj, vv, M = _sym_triplets(seed=14, M=10, L=25)
+    r, c = np.asarray(ii - 1), np.asarray(jj - 1)
+    spat = plan_symmetric(r, c, (M, M))
+    full = plan(r, c, (M, M))
+    theta = jnp.asarray(np.random.default_rng(6).normal(size=1)
+                        .astype(np.float32))
+    base = jnp.asarray(vv)
+
+    g_sym = jax.grad(
+        lambda t: jnp.sum(spat.assemble(base * t).to_dense() ** 2))(theta)
+    g_full = jax.grad(
+        lambda t: jnp.sum(full.assemble(base * t).to_dense() ** 2))(theta)
+    np.testing.assert_allclose(np.asarray(g_sym), np.asarray(g_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bsr_spmv_grad_matches_dense_oracle():
+    S = fsparse([1, 1, 2, 2], [1, 2, 1, 2],
+                np.arange(1.0, 5.0, dtype=np.float32), (4, 4))
+    B = convert(S, "bsr", block=2)
+    x = jnp.asarray(np.random.default_rng(7).normal(size=4)
+                    .astype(np.float32))
+
+    def f_sparse(data, xv):
+        import dataclasses
+        A = dataclasses.replace(B, data=data)
+        return jnp.sum(ops.matmul(A, xv) ** 2)
+
+    def f_dense(data, xv):
+        import dataclasses
+        A = dataclasses.replace(B, data=data)
+        return jnp.sum((A.to_dense() @ xv) ** 2)
+
+    gs = jax.grad(f_sparse, argnums=(0, 1))(B.data, x)
+    gd = jax.grad(f_dense, argnums=(0, 1))(B.data, x)
+    for a, b, name in zip(gs, gd, ("data", "x")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Matlab facade + plan cache + sharded rejects
+# ---------------------------------------------------------------------------
+def test_fsparse_format_keyword():
+    ii, jj, vv, M = _sym_triplets(seed=15)
+    S = fsparse(ii, jj, vv, (M, M))
+    Y = fsparse(ii, jj, vv, (M, M), format="symcsc")
+    assert isinstance(Y, SymCSC)
+    np.testing.assert_array_equal(np.asarray(Y.to_dense()),
+                                  np.asarray(S.to_dense()))
+    assert nnz_of(Y) == 2 * int(Y.nnz) + M
+    ri, ci, vi = find(Y)
+    De = np.zeros((M, M), np.float32)
+    De[ri - 1, ci - 1] = vi
+    np.testing.assert_array_equal(De, np.asarray(S.to_dense()))
+
+
+def test_fsparse_format_validation():
+    with pytest.raises(ValueError, match="unknown assembly format"):
+        fsparse([1], [1], [1.0], (2, 2), format="ell")
+    with pytest.raises(ValueError, match="block"):
+        fsparse([1], [1], [1.0], (2, 2), block=0)
+    with pytest.raises(ValueError, match="block"):
+        fsparse([1], [1], [1.0], (2, 2), format="symcsc", block=2)
+
+
+def test_sparse2_format_in_cache_key():
+    ii, jj, vv, M = _sym_triplets(seed=16, M=14, L=35)
+    info0 = plan_cache_info()
+    A1 = sparse2(ii, jj, vv, (M, M), format="symcsc")
+    A2 = sparse2(ii, jj, 2 * vv, (M, M), format="symcsc")
+    assert plan_cache_info()["hits"] >= info0["hits"] + 1
+    assert isinstance(A1, SymCSC) and isinstance(A2, SymCSC)
+    np.testing.assert_array_equal(np.asarray(A2.to_dense()),
+                                  2 * np.asarray(A1.to_dense()))
+    # the plain plan is a different cache entry, not a collision
+    Ap = sparse2(ii, jj, vv, (M, M))
+    assert isinstance(Ap, CSC)
+    np.testing.assert_array_equal(np.asarray(Ap.to_dense()),
+                                  np.asarray(A1.to_dense()))
+
+
+def test_sparse2_bsr_format():
+    A = sparse2(np.array([1, 3]), np.array([1, 3]),
+                np.array([2.0, 5.0]), (4, 4), format="bsr", block=2)
+    assert isinstance(A, BSR) and A.block == 2
+    want = np.zeros((4, 4), np.float32)
+    want[0, 0], want[2, 2] = 2.0, 5.0
+    np.testing.assert_array_equal(np.asarray(A.to_dense()), want)
+
+
+def test_sharded_symmetric_rejected():
+    ii, jj, vv, M = _sym_triplets(seed=17)
+    with pytest.raises(NotImplementedError, match="plain-CSC"):
+        plan_sharded(np.asarray(ii - 1), np.asarray(jj - 1), (M, M),
+                     symmetric=True)
+    with pytest.raises(NotImplementedError, match="plain-CSC"):
+        fsparse(ii, jj, vv, (M, M), method="sharded", format="symcsc")
