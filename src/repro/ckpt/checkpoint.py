@@ -21,10 +21,8 @@ import os
 import shutil
 import threading
 import time
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 

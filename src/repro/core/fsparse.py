@@ -7,7 +7,8 @@ boolean ``fused=`` flag is deprecated in favour of ``method=``.
 """
 from __future__ import annotations
 
-from ..sparse.matlab import expand_indices as _expand  # noqa: F401 (b/c)
+# back-compat re-export: old callers import expand_indices from here
+from ..sparse.matlab import expand_indices as _expand  # noqa: F401
 from ..sparse.matlab import fsparse as _fsparse
 from ..sparse.matlab import fsparse_coo as _fsparse_coo
 from .compat import resolve_method_arg

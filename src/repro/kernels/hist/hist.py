@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import INTERPRET, cdiv, round_up
+from ..common import INTERPRET, round_up
 
 
 def _hist_kernel(keys_ref, out_ref, *, block_t: int):

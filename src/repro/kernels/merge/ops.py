@@ -25,6 +25,25 @@ from .ref import merge_search_ref
 MERGE_RESIDENT_MAX_BYTES = 8 * 1024 * 1024
 
 
+def merge_vmem_spec(n_targets: int) -> dict:
+    """Static residency decision of the merge positioning kernel.
+
+    Mirrors :func:`merge_search`'s runtime guard: both int32 target key
+    vectors (rows + cols) stay VMEM-resident, 8 bytes per target
+    element.  Consumed by :mod:`repro.sparse.analysis.vmem`.
+    """
+    resident = 2 * int(n_targets) * 4
+    fits = resident <= MERGE_RESIDENT_MAX_BYTES
+    return {
+        "family": "merge_search",
+        "params": {"n_targets": int(n_targets)},
+        "resident_bytes": resident,
+        "budget_bytes": MERGE_RESIDENT_MAX_BYTES,
+        "fits": fits,
+        "path": "pallas-merge" if fits else "xla-searchsorted",
+    }
+
+
 @functools.partial(
     jax.jit, static_argnames=("side", "block_b", "interpret")
 )

@@ -108,6 +108,33 @@ def plan_digit_passes(
     )
 
 
+def radix_vmem_spec(M: int, N: int, L: int, *,
+                    max_bits: int | None = None) -> dict:
+    """Static VMEM profile of the planned radix pass schedule.
+
+    The radix planner never falls back: :func:`plan_digit_passes` caps
+    every digit at ``max_bits`` (default :data:`_MAX_BITS`) by
+    construction, so the widest padded one-hot bin tile is bounded at
+    plan time.  This spec reports that bound — the largest padded tile
+    in int32 bytes against the planner's own ``2^max_bits`` ceiling —
+    plus the pass count, for the analysis layer's table.
+    """
+    bits_cap = _MAX_BITS if max_bits is None else int(max_bits)
+    passes = plan_digit_passes(M, N, L, max_bits=max_bits)
+    tile = max(round_up(1 << p.bits, LANES) for p in passes)
+    resident = tile * 4
+    budget = round_up(1 << bits_cap, LANES) * 4
+    return {
+        "family": "radix_sort",
+        "params": {"M": int(M), "N": int(N), "L": int(L),
+                   "passes": len(passes)},
+        "resident_bytes": resident,
+        "budget_bytes": budget,
+        "fits": resident <= budget,  # planner-enforced; always True
+        "path": "pallas-lsd-radix",
+    }
+
+
 def radix_pass_positions(
     keys: jax.Array,
     *,

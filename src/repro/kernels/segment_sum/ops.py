@@ -188,6 +188,52 @@ def gather2_segment_sum_sorted(
         .astype(dtype)
 
 
+def fill_vmem_spec(L: int, dtype=jnp.float32) -> dict:
+    """Static VMEM residency decision of the fused fill.
+
+    Mirrors :func:`gather_segment_sum_sorted`'s runtime guard exactly:
+    the resident buffer is the length-``L`` value stream in its
+    *accumulator* dtype (``accum_dtype(fill_dtype(dtype))`` — bf16/f16
+    streams count as f32).  Consumed by
+    :mod:`repro.sparse.analysis.vmem` so the pass/fallback frontier is
+    a static report, not a runtime discovery.
+    """
+    acc = jnp.dtype(accum_dtype(fill_dtype(jnp.dtype(dtype))))
+    resident = int(L) * acc.itemsize
+    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    return {
+        "family": "fill_fused",
+        "params": {"L": int(L), "dtype": jnp.dtype(dtype).name},
+        "resident_bytes": resident,
+        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "fits": fits,
+        "path": "pallas-fused" if fits else "xla-blocked-cumsum",
+    }
+
+
+def spgemm_vmem_spec(a_capacity: int, b_capacity: int,
+                     dtype=jnp.float32) -> dict:
+    """Static residency decision of the fused SpGEMM numeric phase.
+
+    Mirrors :func:`gather2_segment_sum_sorted`: both operand value
+    buffers stay resident in the accumulator dtype, so the footprint is
+    ``(a_capacity + b_capacity) * itemsize(accum)``.
+    """
+    acc = jnp.dtype(accum_dtype(fill_dtype(jnp.dtype(dtype))))
+    resident = (int(a_capacity) + int(b_capacity)) * acc.itemsize
+    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    return {
+        "family": "spgemm_fused",
+        "params": {"a_capacity": int(a_capacity),
+                   "b_capacity": int(b_capacity),
+                   "dtype": jnp.dtype(dtype).name},
+        "resident_bytes": resident,
+        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "fits": fits,
+        "path": "pallas-fused" if fits else "xla-blocked-cumsum",
+    }
+
+
 def _segment_ends(slot: jax.Array, *, num_segments: int) -> jax.Array:
     """Sorted-stream position of each segment's last element (-1: empty)."""
     L = slot.shape[0]

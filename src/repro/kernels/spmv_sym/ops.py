@@ -29,6 +29,46 @@ def _use_kernel(resident_bytes: int, interpret: bool | None) -> bool:
     return True                       # explicit True/False: run Pallas
 
 
+def sym_vmem_spec(M: int, dtype=jnp.float32) -> dict:
+    """Static residency decision of the symmetric SpMV kernel.
+
+    Mirrors :func:`spmv_sym`'s runtime guard: the dense vector ``x``
+    (``M`` elements) stays VMEM-resident so both triangle contributions
+    read it in one sweep.  Off-TPU the jnp oracle runs regardless of
+    the budget; ``path`` reports the budget decision alone.
+    """
+    resident = int(M) * jnp.dtype(dtype).itemsize
+    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    return {
+        "family": "spmv_sym",
+        "params": {"M": int(M), "dtype": jnp.dtype(dtype).name},
+        "resident_bytes": resident,
+        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "fits": fits,
+        "path": "pallas-sym-streams" if fits else "xla-ref",
+    }
+
+
+def bsr_vmem_spec(N: int, block: int, dtype=jnp.float32) -> dict:
+    """Static residency decision of the blocked SpMV kernel.
+
+    Mirrors :func:`spmv_bsr`'s runtime guard: the dense vector reshaped
+    to ``(N // block, block)`` tiles stays VMEM-resident.
+    """
+    b = int(block)
+    resident = (int(N) // b) * b * jnp.dtype(dtype).itemsize if b else 0
+    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    return {
+        "family": "spmv_bsr",
+        "params": {"N": int(N), "block": b,
+                   "dtype": jnp.dtype(dtype).name},
+        "resident_bytes": resident,
+        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "fits": fits,
+        "path": "pallas-bsr-tiles" if fits else "xla-ref",
+    }
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def spmv_sym(diag, data, indices, indptr, x, *, block_b: int = 65536,
              interpret: bool | None = None) -> jax.Array:

@@ -27,7 +27,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, get_config
@@ -82,7 +81,6 @@ def collective_census(hlo_text: str) -> dict[str, dict[str, float]]:
         if not m:
             continue
         result_type, opname = m.groups()
-        base = opname.rstrip("0123456789.").rstrip("-")
         for coll in _COLLECTIVES:
             if opname.startswith(coll):
                 census[coll]["count"] += 1

@@ -17,7 +17,6 @@ from __future__ import annotations
 import re
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .mesh import batch_axes

@@ -17,14 +17,12 @@ Production features exercised here (and designed for 1000+ nodes):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import signal
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -35,7 +33,7 @@ from ..models.model import init_model
 from ..train.optimizer import OptConfig
 from ..train.train_step import TrainConfig, init_train_state, make_train_step
 from .mesh import batch_axes, make_host_mesh
-from .sharding import param_shardings, param_specs
+from .sharding import param_specs
 
 
 def main(argv=None):

@@ -8,7 +8,6 @@ against a full KV cache.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -152,8 +151,8 @@ def decode_attention(q, k_cache, v_cache):
                    preferred_element_type=jnp.float32)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype),
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / denom).astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, Dh).astype(q.dtype)
 

@@ -450,7 +450,6 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
 
     elif fam in ("ssm", "hybrid"):
         every = cfg.hybrid_attn_every
-        n_attn = cfg.n_layers // every if every else 0
 
         def step(carry, xs):
             if fam == "hybrid" and every:

@@ -43,6 +43,13 @@ from __future__ import annotations
 
 from ..core.coo import COO, coo_from_matlab
 from ..core.csc import CSC, spmv, spmv_t
+from .errors import (
+    CacheCorruptionWarning,
+    CapacityWarning,
+    FallbackWarning,
+    InvariantViolation,
+    ReproWarning,
+)
 from .dispatch import (
     available_methods,
     default_method,
@@ -115,6 +122,7 @@ from .sharded import (
     plan_sharded,
     plan_sharded_coo,
 )
+from .analysis import validate_matrix, validate_pattern
 
 
 def assemble(coo: COO, *, nzmax: int | None = None,
@@ -129,10 +137,15 @@ __all__ = [
     "COO",
     "CSC",
     "CSR",
+    "CacheCorruptionWarning",
+    "CapacityWarning",
+    "FallbackWarning",
+    "InvariantViolation",
     "LRUCache",
     "PlanService",
     "PlanUpdate",
     "ProductPattern",
+    "ReproWarning",
     "ShardedCSC",
     "ShardedPattern",
     "SparseMatrix",
@@ -188,4 +201,6 @@ __all__ = [
     "spmv_t",
     "tcmalloc_hint",
     "trivial_pattern",
+    "validate_matrix",
+    "validate_pattern",
 ]

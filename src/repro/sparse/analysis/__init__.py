@@ -1,0 +1,53 @@
+"""Static analysis & sanitizers for the sparse assembly stack.
+
+Four layers, one CLI (``python -m repro.sparse.analysis``):
+
+* :mod:`.invariants` — structural validators per registered
+  pattern/format class (``validate_pattern`` / ``validate_matrix``),
+  raising :class:`~repro.sparse.errors.InvariantViolation` with the
+  failed invariant's stable name; ``REPRO_VALIDATE=1`` turns them on
+  inside ``SparsePattern.update`` and ``PlanService``.
+* :mod:`.contracts` — jaxpr auditor for the fill/multiply/spmv hot
+  paths (no 16-bit accumulation, no host callbacks, ``fill_dtype``
+  outputs) plus the :class:`~.contracts.RetraceAuditor` epoch checker.
+* :mod:`.vmem` — the Pallas VMEM residency frontier as a static table
+  (per kernel family ``*_vmem_spec`` against the shared 8 MB cap).
+* :mod:`.concurrency` — AST lint over the serving stack's shared
+  module-level caches: every mutation under a lock or LRUCache method.
+"""
+
+from __future__ import annotations
+
+from ..errors import InvariantViolation
+from .concurrency import format_findings, lint_shared_state
+from .contracts import (
+    RetraceAuditor,
+    audit_default_paths,
+    audit_jaxpr,
+    audit_retraces,
+)
+from .invariants import (
+    maybe_validate_pattern,
+    validate_matrix,
+    validate_pattern,
+    validation_enabled,
+    validator_for_format,
+)
+from .vmem import format_table, vmem_report
+
+__all__ = [
+    "InvariantViolation",
+    "RetraceAuditor",
+    "audit_default_paths",
+    "audit_jaxpr",
+    "audit_retraces",
+    "format_findings",
+    "format_table",
+    "lint_shared_state",
+    "maybe_validate_pattern",
+    "validate_matrix",
+    "validate_pattern",
+    "validation_enabled",
+    "validator_for_format",
+    "vmem_report",
+]

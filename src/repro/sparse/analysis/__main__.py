@@ -1,0 +1,159 @@
+"""CLI driver: ``python -m repro.sparse.analysis [--all] [...]``.
+
+Runs the four analysis layers and exits non-zero on the first broken
+contract, so CI can gate on it:
+
+* ``--invariants``   validator self-check: a battery of valid
+  structures must validate clean, and a set of seeded corruptions must
+  each be rejected with the right invariant name.
+* ``--jaxpr``        trace + audit every fill/multiply/spmv path
+  (dtype contract, no host callbacks) and the epoch retrace contract.
+* ``--vmem``         print the static VMEM residency table
+  (``--json PATH`` also writes it as the autotuner artifact).
+* ``--concurrency``  AST lint of shared-cache mutations.
+* ``--all``          everything above (the default with no flags).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+from ..errors import InvariantViolation
+
+
+def _check_invariants() -> list[str]:
+    """Valid structures validate clean; seeded corruptions are named."""
+    import jax.numpy as jnp
+
+    from ..formats import convert
+    from ..pattern import plan, plan_symmetric, trivial_pattern
+    from ..spgemm import product_plan
+    from .invariants import validate_matrix, validate_pattern
+
+    failures: list[str] = []
+    rows = np.array([0, 1, 0, 2, 2, 2, 3], np.int64)
+    cols = np.array([0, 0, 1, 2, 2, 3, 2], np.int64)
+    pat = plan(rows, cols, (4, 4))
+    A = pat.assemble(jnp.ones((rows.size,), jnp.float32))
+    valid = [
+        ("SparsePattern", validate_pattern, pat),
+        ("trivial_pattern", validate_pattern, trivial_pattern(0, (3, 3))),
+        ("SymPattern", validate_pattern, plan_symmetric(rows, cols, (4, 4))),
+        ("ProductPattern", validate_pattern, product_plan(A, A)),
+        ("CSC", validate_matrix, A),
+        ("CSR", validate_matrix, convert(A, "csr")),
+        ("COO", validate_matrix, convert(A, "coo")),
+        ("SymCSC", validate_matrix, convert(A, "symcsc")),
+        ("BSR", validate_matrix, convert(A, "bsr", block=2)),
+    ]
+    for label, check, obj in valid:
+        try:
+            check(obj, subject=label)
+        except InvariantViolation as e:
+            failures.append(f"valid {label} rejected: {e}")
+
+    def _corrupt(field, value):
+        return dataclasses.replace(pat, **{field: value})
+
+    indptr = np.asarray(pat.indptr).copy()
+    indptr[1], indptr[2] = indptr[2], indptr[1]
+    perm = np.asarray(pat.perm).copy()
+    perm[0] = perm[1]
+    seeded = [
+        ("indptr-monotone", _corrupt("indptr", jnp.asarray(indptr))),
+        ("perm-permutation", _corrupt("perm", jnp.asarray(perm))),
+        ("epoch-valid", dataclasses.replace(pat, epoch=-1)),
+        ("slot-bounds", _corrupt("slot", pat.slot.at[0].set(pat.nzmax + 3))),
+    ]
+    for invariant, bad in seeded:
+        try:
+            validate_pattern(bad, subject=f"seeded:{invariant}")
+        except InvariantViolation as e:
+            if e.invariant != invariant:
+                failures.append(
+                    f"seeded {invariant} caught as {e.invariant!r}",
+                )
+        else:
+            failures.append(f"seeded {invariant} NOT caught")
+    return failures
+
+
+def _check_jaxpr() -> list[str]:
+    from .contracts import audit_default_paths, audit_retraces
+
+    try:
+        reports = audit_default_paths()
+        audit_retraces()
+    except InvariantViolation as e:
+        return [str(e)]
+    print(
+        f"jaxpr audit: {len(reports)} hot paths clean "
+        "(+ retrace contract)",
+    )
+    return []
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.sparse.analysis",
+        description="static analysis & sanitizers for repro.sparse",
+    )
+    parser.add_argument(
+        "--all",
+        action="store_true",
+        help="run every layer (default with no flags)",
+    )
+    parser.add_argument("--invariants", action="store_true")
+    parser.add_argument("--jaxpr", action="store_true")
+    parser.add_argument("--vmem", action="store_true")
+    parser.add_argument("--concurrency", action="store_true")
+    parser.add_argument(
+        "--json",
+        metavar="PATH",
+        help="also write the VMEM report as JSON",
+    )
+    args = parser.parse_args(argv)
+    none_picked = not (
+        args.invariants or args.jaxpr or args.vmem or args.concurrency
+    )
+    run_all = args.all or none_picked
+
+    failures: list[str] = []
+    if run_all or args.invariants:
+        bad = _check_invariants()
+        failures += bad
+        if not bad:
+            print(
+                "invariant validators: valid structures clean, "
+                "seeded corruptions rejected by name",
+            )
+    if run_all or args.jaxpr:
+        failures += _check_jaxpr()
+    if run_all or args.vmem:
+        from .vmem import dump_json, format_table, vmem_report
+
+        rows = vmem_report()
+        print(format_table(rows))
+        if args.json:
+            dump_json(rows, args.json)
+            print(f"vmem report written to {args.json}")
+    if run_all or args.concurrency:
+        from .concurrency import format_findings, lint_shared_state
+
+        findings = lint_shared_state()
+        print(format_findings(findings))
+        failures += [f["reason"] for f in findings]
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

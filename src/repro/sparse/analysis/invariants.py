@@ -1,0 +1,782 @@
+"""Structural invariant validators for plans and format containers.
+
+Every plan and format container in the package carries invariants the
+numeric phase silently assumes (a ``mode="drop"`` scatter hides an
+out-of-range slot instead of crashing on it): the sorted ``(col, row)``
+stream, ``perm`` being a permutation, monotone ``indptr`` bounded by
+``nzmax``, padding sentinels in the tails, strict-upper SymCSC storage,
+BSR block alignment, per-block ShardedPattern consistency.  This module
+checks them *mechanically*, raising a structured
+:class:`~repro.sparse.errors.InvariantViolation` that names the failed
+invariant — so a tampered pickle, a buggy transform, or a seeded
+corruption in a test is rejected with a precise diagnosis instead of a
+wrong answer.
+
+Entry points:
+
+* :func:`validate_pattern` — SparsePattern / SymPattern /
+  ProductPattern / ShardedPattern.
+* :func:`validate_matrix` — CSC / CSR / COO / SymCSC / BSR /
+  ShardedCSC (dispatched per registered format class; see
+  :func:`validator_for_format`).
+* :func:`maybe_validate_pattern` — the ``REPRO_VALIDATE=1`` gate used
+  by ``SparsePattern.update`` and ``PlanService``.
+
+Validators run host-side over concrete arrays (like the plan caches);
+they are debug/load-time tools, not jit-path code.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import numpy as np
+
+from ..errors import InvariantViolation
+
+_PATTERN_VALIDATORS: dict[type, Callable] = {}
+_MATRIX_VALIDATORS: dict[type, Callable] = {}
+
+
+def register_pattern_validator(cls: type):
+    """Decorator: register ``fn(p, subject=None)`` for a plan class."""
+
+    def deco(fn):
+        _PATTERN_VALIDATORS[cls] = fn
+        return fn
+
+    return deco
+
+
+def register_matrix_validator(cls: type):
+    """Decorator: register ``fn(A, subject=None)`` for a format class."""
+
+    def deco(fn):
+        _MATRIX_VALIDATORS[cls] = fn
+        return fn
+
+    return deco
+
+
+def _lookup(registry: dict[type, Callable], obj) -> Callable:
+    for base in type(obj).__mro__:
+        fn = registry.get(base)
+        if fn is not None:
+            return fn
+    raise TypeError(
+        f"no invariant validator registered for {type(obj).__name__}; "
+        f"known: {sorted(c.__name__ for c in registry)}",
+    )
+
+
+def validate_pattern(p, *, subject: str | None = None):
+    """Check every structural invariant of a plan object.
+
+    Accepts a :class:`~repro.sparse.pattern.SparsePattern`,
+    :class:`~repro.sparse.pattern.SymPattern`,
+    :class:`~repro.sparse.spgemm.ProductPattern` or
+    :class:`~repro.sparse.sharded.ShardedPattern`.  Raises
+    :class:`InvariantViolation` naming the first failed invariant;
+    returns ``p`` unchanged when everything holds (usable as a fixture
+    pass-through).
+    """
+    _ensure_registered()
+    _lookup(_PATTERN_VALIDATORS, p)(p, subject=subject)
+    return p
+
+
+def validate_matrix(A, *, subject: str | None = None):
+    """Check every structural invariant of a format container.
+
+    Dispatched per registered format class (CSC/CSR/COO/SymCSC/BSR/
+    ShardedCSC).  Raises :class:`InvariantViolation` naming the first
+    failed invariant; returns ``A`` unchanged when everything holds.
+    """
+    _ensure_registered()
+    _lookup(_MATRIX_VALIDATORS, A)(A, subject=subject)
+    return A
+
+
+def validator_for_format(name: str) -> Callable:
+    """The matrix validator behind a registered format *name*."""
+    from ..formats import FORMATS
+
+    _ensure_registered()
+    cls = FORMATS[name]
+    for base in cls.__mro__:
+        fn = _MATRIX_VALIDATORS.get(base)
+        if fn is not None:
+            return fn
+    raise TypeError(f"no validator registered for format {name!r}")
+
+
+def validation_enabled() -> bool:
+    """True when ``REPRO_VALIDATE`` requests validate-on-mutate."""
+    flag = os.environ.get("REPRO_VALIDATE", "")
+    return flag.strip().lower() not in ("", "0", "false", "off")
+
+
+def maybe_validate_pattern(p, *, subject: str | None = None):
+    """:func:`validate_pattern` under the ``REPRO_VALIDATE=1`` gate."""
+    if validation_enabled():
+        validate_pattern(p, subject=subject)
+    return p
+
+
+def _req(cond, invariant: str, message: str, subject: str | None):
+    if not cond:
+        raise InvariantViolation(invariant, message, subject=subject)
+
+
+# ---------------------------------------------------------------------------
+# Plan validators
+# ---------------------------------------------------------------------------
+def _validate_sparse_pattern(p, *, subject: str | None = None):
+    subject = subject or f"SparsePattern{tuple(p.shape)}"
+    M, N = int(p.shape[0]), int(p.shape[1])
+    perm = np.asarray(p.perm)
+    slot = np.asarray(p.slot)
+    indices = np.asarray(p.indices)
+    indptr = np.asarray(p.indptr)
+    srows = np.asarray(p.srows)
+    scols = np.asarray(p.scols)
+    _req(
+        perm.ndim == 1,
+        "field-shape",
+        f"perm must be 1-d, got shape {perm.shape}",
+        subject,
+    )
+    L = int(perm.shape[0])
+    nzmax = int(indices.shape[-1]) if indices.ndim == 1 else -1
+    for name, arr in (("slot", slot), ("srows", srows), ("scols", scols)):
+        _req(
+            arr.shape == (L,),
+            "field-shape",
+            f"{name} must have shape (L={L},), got {arr.shape}",
+            subject,
+        )
+    _req(
+        indices.ndim == 1,
+        "field-shape",
+        f"indices must be 1-d, got shape {indices.shape}",
+        subject,
+    )
+    _req(
+        indptr.shape == (N + 1,),
+        "field-shape",
+        f"indptr must have shape (N+1={N + 1},), got {indptr.shape}",
+        subject,
+    )
+    _req(
+        isinstance(p.epoch, int) and p.epoch >= 0,
+        "epoch-valid",
+        f"epoch must be a non-negative int, got {p.epoch!r}",
+        subject,
+    )
+    from ..pattern import ACCUM_MODES
+
+    _req(
+        p.accum in ACCUM_MODES,
+        "accum-valid",
+        f"unknown accum mode {p.accum!r}",
+        subject,
+    )
+    nnz = int(np.asarray(p.nnz))
+    _req(
+        0 <= nnz <= nzmax,
+        "nzmax-capacity",
+        f"nnz={nnz} outside [0, nzmax={nzmax}] — the capacity lies",
+        subject,
+    )
+    _req(
+        np.array_equal(np.sort(perm), np.arange(L, dtype=perm.dtype)),
+        "perm-permutation",
+        "perm is not a permutation of [0, L)",
+        subject,
+    )
+    _req(
+        bool(np.all((slot >= 0) & (slot <= nzmax))),
+        "slot-bounds",
+        f"slot entries must lie in [0, nzmax={nzmax}] "
+        "(nzmax marks dropped inputs)",
+        subject,
+    )
+    _req(
+        int(indptr[0]) == 0 and bool(np.all(np.diff(indptr) >= 0)),
+        "indptr-monotone",
+        "indptr must start at 0 and be non-decreasing",
+        subject,
+    )
+    _req(
+        int(indptr[-1]) == nnz,
+        "indptr-nnz",
+        f"indptr[-1]={int(indptr[-1])} != nnz={nnz}",
+        subject,
+    )
+    _req(
+        bool(np.all((indices[:nnz] >= 0) & (indices[:nnz] < M))),
+        "indices-bounds",
+        f"stored row indices must lie in [0, M={M})",
+        subject,
+    )
+    _req(
+        bool(np.all(indices[nnz:] == M)),
+        "padding-sentinel",
+        f"indices tail beyond nnz must hold the M={M} sentinel",
+        subject,
+    )
+    _req(
+        bool(np.all((srows >= 0) & (srows <= M))),
+        "stream-key-bounds",
+        f"srows must lie in [0, M={M}] (M marks padding)",
+        subject,
+    )
+    _req(
+        bool(np.all((scols >= 0) & (scols < max(N, 1)))),
+        "stream-key-bounds",
+        f"scols must lie in [0, N={N})",
+        subject,
+    )
+    kept = slot < nzmax
+    _req(
+        bool(np.all(slot[srows == M] == nzmax)),
+        "padding-sentinel",
+        "a row-sentinel (padding) entry holds a kept slot",
+        subject,
+    )
+    key = scols.astype(np.int64) * (M + 2) + srows.astype(np.int64)
+    _req(
+        bool(np.all(np.diff(key) >= 0)),
+        "stream-sorted",
+        "the (scols, srows) key stream is not (col, row)-sorted",
+        subject,
+    )
+    ks = slot[kept]
+    if ks.size:
+        d = np.diff(ks)
+        _req(
+            int(ks[0]) == 0 and bool(np.all((d >= 0) & (d <= 1))),
+            "stream-sorted",
+            "kept slots must be the dedup ranks of the sorted stream "
+            "(start at 0, step by 0 or 1)",
+            subject,
+        )
+        _req(
+            bool(np.all(indices[ks] == srows[kept])),
+            "slot-row-consistent",
+            "indices[slot] disagrees with the sorted row stream",
+            subject,
+        )
+        jj = scols[kept]
+        _req(
+            bool(np.all((ks >= indptr[jj]) & (ks < indptr[jj + 1]))),
+            "slot-column-consistent",
+            "kept slots fall outside their column's indptr range",
+            subject,
+        )
+
+
+def _validate_sym_pattern(p, *, subject: str | None = None):
+    subject = subject or f"SymPattern{tuple(p.shape)}"
+    M, N = int(p.shape[0]), int(p.shape[1])
+    _req(
+        M == N,
+        "symcsc-square",
+        f"a symmetric plan requires a square shape, got {p.shape}",
+        subject,
+    )
+    _validate_sparse_pattern(p.upat, subject=f"{subject}.upat")
+    _req(
+        tuple(p.upat.shape) == (M, N),
+        "shape-consistent",
+        f"upat shape {tuple(p.upat.shape)} != plan shape {(M, N)}",
+        subject,
+    )
+    usel = np.asarray(p.usel)
+    dsel = np.asarray(p.dsel)
+    drow = np.asarray(p.drow)
+    L = int(p.L)
+    _req(
+        usel.ndim == 1 and usel.shape[0] == p.upat.L,
+        "field-shape",
+        f"usel must align with the halved plan (Lu={p.upat.L}), got "
+        f"shape {usel.shape}",
+        subject,
+    )
+    _req(
+        dsel.ndim == 1 and drow.shape == dsel.shape,
+        "field-shape",
+        f"dsel/drow must be equal-length 1-d, got {dsel.shape} and "
+        f"{drow.shape}",
+        subject,
+    )
+    usel_ok = bool(np.all((usel >= 0) & (usel < L)))
+    dsel_ok = bool(np.all((dsel >= 0) & (dsel < L)))
+    _req(
+        usel_ok and dsel_ok,
+        "selector-bounds",
+        f"usel/dsel must index the input stream [0, L={L})",
+        subject,
+    )
+    _req(
+        bool(np.all((drow >= 0) & (drow < M))),
+        "selector-bounds",
+        f"drow must lie in [0, M={M})",
+        subject,
+    )
+    slot = np.asarray(p.upat.slot)
+    kept = slot < p.upat.nzmax
+    srows = np.asarray(p.upat.srows)[kept]
+    scols = np.asarray(p.upat.scols)[kept]
+    _req(
+        bool(np.all(srows < scols)),
+        "symcsc-strict-upper",
+        "the halved plan holds a non-strict-upper entry (row >= col)",
+        subject,
+    )
+
+
+def _validate_product_pattern(p, *, subject: str | None = None):
+    subject = subject or "ProductPattern"
+    sa = np.asarray(p.sa)
+    sb = np.asarray(p.sb)
+    _req(
+        sa.ndim == 1 and sa.shape == sb.shape,
+        "field-shape",
+        f"sa/sb must be equal-length 1-d, got {sa.shape} and {sb.shape}",
+        subject,
+    )
+    _req(
+        isinstance(p.epoch, int) and p.epoch >= 0,
+        "epoch-valid",
+        f"epoch must be a non-negative int, got {p.epoch!r}",
+        subject,
+    )
+    _validate_sparse_pattern(p.pattern, subject=f"{subject}.pattern")
+    _req(
+        p.pattern.L == int(sa.shape[0]),
+        "field-shape",
+        f"expansion maps (flops_max={sa.shape[0]}) must align with the "
+        f"product stream (L={p.pattern.L})",
+        subject,
+    )
+    _req(
+        bool(np.all((sa >= 0) & (sa < max(int(p.a_capacity), 1)))),
+        "expansion-bounds",
+        f"sa must index A's storage [0, {p.a_capacity})",
+        subject,
+    )
+    _req(
+        bool(np.all((sb >= 0) & (sb < max(int(p.b_capacity), 1)))),
+        "expansion-bounds",
+        f"sb must index B's storage [0, {p.b_capacity})",
+        subject,
+    )
+
+
+def _validate_sharded_pattern(p, *, subject: str | None = None):
+    subject = subject or f"ShardedPattern{tuple(p.shape)}"
+    send_slot = np.asarray(p.send_slot)
+    perm = np.asarray(p.perm)
+    slot = np.asarray(p.slot)
+    indices = np.asarray(p.indices)
+    indptr = np.asarray(p.indptr)
+    nnz = np.asarray(p.nnz)
+    send_base = np.asarray(p.send_base)
+    block_load = np.asarray(p.block_load)
+    overflow = np.asarray(p.overflow)
+    N = int(p.shape[1])
+    _req(
+        send_slot.ndim == 2,
+        "field-shape",
+        f"send_slot must be int32[p, L_loc], got shape {send_slot.shape}",
+        subject,
+    )
+    pnum = int(send_slot.shape[0])
+    for name, arr in (("perm", perm), ("slot", slot), ("indices", indices)):
+        _req(
+            arr.ndim == 2 and arr.shape[0] == pnum,
+            "field-shape",
+            f"{name} must carry the device axis p={pnum} leading, got "
+            f"shape {arr.shape}",
+            subject,
+        )
+    _req(
+        indptr.shape == (pnum, N + 1),
+        "field-shape",
+        f"indptr must have shape (p, N+1)={(pnum, N + 1)}, got "
+        f"{indptr.shape}",
+        subject,
+    )
+    _req(
+        nnz.shape == (pnum,) and overflow.shape == (pnum,),
+        "field-shape",
+        "nnz/overflow must be per-block vectors",
+        subject,
+    )
+    _req(
+        send_base.shape == (pnum, pnum) and block_load.shape == (pnum, pnum),
+        "field-shape",
+        "send_base/block_load must be [p, p] routing tables",
+        subject,
+    )
+    _req(
+        0 <= int(p.L) <= send_slot.size,
+        "field-shape",
+        f"L={p.L} exceeds the padded stream length {send_slot.size}",
+        subject,
+    )
+    drop = pnum * int(p.capacity)
+    _req(
+        bool(np.all((send_slot >= 0) & (send_slot <= drop))),
+        "slot-bounds",
+        f"send_slot must lie in [0, p*capacity={drop}]",
+        subject,
+    )
+    R = int(perm.shape[1])
+    nzb = int(indices.shape[1])
+    rpb = int(p.rpb)
+    for b in range(pnum):
+        sb_ = f"{subject}[block {b}]"
+        _req(
+            np.array_equal(np.sort(perm[b]), np.arange(R, dtype=perm.dtype)),
+            "perm-permutation",
+            "block perm is not a permutation of the received stream",
+            sb_,
+        )
+        _req(
+            bool(np.all((slot[b] >= 0) & (slot[b] <= nzb))),
+            "slot-bounds",
+            f"block slots must lie in [0, nzb={nzb}]",
+            sb_,
+        )
+        nb = int(nnz[b])
+        _req(
+            0 <= nb <= nzb,
+            "nzmax-capacity",
+            f"block nnz={nb} outside [0, nzb={nzb}]",
+            sb_,
+        )
+        _req(
+            int(indptr[b, 0]) == 0 and bool(np.all(np.diff(indptr[b]) >= 0)),
+            "indptr-monotone",
+            "block indptr must start at 0 and be non-decreasing",
+            sb_,
+        )
+        _req(
+            int(indptr[b, -1]) == nb,
+            "indptr-nnz",
+            f"block indptr[-1]={int(indptr[b, -1])} != nnz={nb}",
+            sb_,
+        )
+        _req(
+            bool(np.all((indices[b, :nb] >= 0) & (indices[b, :nb] < rpb))),
+            "indices-bounds",
+            f"block row indices must lie in [0, rpb={rpb})",
+            sb_,
+        )
+        _req(
+            bool(np.all(indices[b, nb:] == rpb)),
+            "padding-sentinel",
+            f"block indices tail must hold the rpb={rpb} sentinel",
+            sb_,
+        )
+    _req(
+        bool(np.all(block_load == block_load[0])),
+        "sharded-block-consistency",
+        "block_load rows must be identical across devices (psum'd)",
+        subject,
+    )
+    scan_ok = bool(np.all(np.diff(send_base, axis=0) >= 0))
+    _req(
+        bool(np.all(send_base >= 0)) and scan_ok,
+        "sharded-block-consistency",
+        "send_base must be a non-negative exclusive scan over the "
+        "device axis",
+        subject,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Format validators
+# ---------------------------------------------------------------------------
+def _validate_compressed(
+    *,
+    data,
+    indices,
+    indptr,
+    nnz,
+    n_ptr: int,
+    idx_bound: int,
+    sentinel: int,
+    subject: str,
+    axis_name: str,
+):
+    """Shared CSC/CSR/BSR-block core: monotone pointers, sorted
+    deduplicated indices per segment, sentinel-padded tails."""
+    _req(
+        indices.ndim == 1,
+        "field-shape",
+        f"indices must be 1-d, got shape {indices.shape}",
+        subject,
+    )
+    nzmax = int(indices.shape[0])
+    _req(
+        int(data.shape[-1]) == nzmax,
+        "field-shape",
+        f"data capacity {data.shape[-1]} != nzmax={nzmax}",
+        subject,
+    )
+    _req(
+        indptr.shape == (n_ptr,),
+        "field-shape",
+        f"indptr must have shape ({n_ptr},), got {indptr.shape}",
+        subject,
+    )
+    _req(
+        0 <= nnz <= nzmax,
+        "nzmax-capacity",
+        f"nnz={nnz} outside [0, nzmax={nzmax}] — the capacity lies",
+        subject,
+    )
+    _req(
+        int(indptr[0]) == 0 and bool(np.all(np.diff(indptr) >= 0)),
+        "indptr-monotone",
+        "indptr must start at 0 and be non-decreasing",
+        subject,
+    )
+    _req(
+        int(indptr[-1]) == nnz,
+        "indptr-nnz",
+        f"indptr[-1]={int(indptr[-1])} != nnz={nnz}",
+        subject,
+    )
+    _req(
+        bool(np.all((indices[:nnz] >= 0) & (indices[:nnz] < idx_bound))),
+        "indices-bounds",
+        f"stored indices must lie in [0, {idx_bound})",
+        subject,
+    )
+    _req(
+        bool(np.all(indices[nnz:] == sentinel)),
+        "padding-sentinel",
+        f"indices tail beyond nnz must hold the {sentinel} sentinel",
+        subject,
+    )
+    if nnz > 1:
+        seg = np.repeat(np.arange(n_ptr - 1), np.diff(indptr))
+        same = seg[1:] == seg[:-1]
+        _req(
+            bool(np.all(indices[1:nnz][same] > indices[:nnz][:-1][same])),
+            "stream-sorted",
+            f"stored indices within a {axis_name} must be strictly "
+            "increasing (sorted, deduplicated)",
+            subject,
+        )
+
+
+def _validate_csc(A, *, subject: str | None = None):
+    subject = subject or f"CSC{tuple(A.shape)}"
+    M, N = int(A.shape[0]), int(A.shape[1])
+    _validate_compressed(
+        data=np.asarray(A.data),
+        indices=np.asarray(A.indices),
+        indptr=np.asarray(A.indptr),
+        nnz=int(np.asarray(A.nnz)),
+        n_ptr=N + 1,
+        idx_bound=M,
+        sentinel=M,
+        subject=subject,
+        axis_name="column",
+    )
+
+
+def _validate_csr(A, *, subject: str | None = None):
+    subject = subject or f"CSR{tuple(A.shape)}"
+    M, N = int(A.shape[0]), int(A.shape[1])
+    _validate_compressed(
+        data=np.asarray(A.data),
+        indices=np.asarray(A.indices),
+        indptr=np.asarray(A.indptr),
+        nnz=int(np.asarray(A.nnz)),
+        n_ptr=M + 1,
+        idx_bound=N,
+        sentinel=N,
+        subject=subject,
+        axis_name="row",
+    )
+
+
+def _validate_coo(A, *, subject: str | None = None):
+    subject = subject or f"COO{tuple(A.shape)}"
+    M, N = int(A.shape[0]), int(A.shape[1])
+    rows = np.asarray(A.rows)
+    cols = np.asarray(A.cols)
+    vals = np.asarray(A.vals)
+    aligned = rows.ndim == 1 and rows.shape == cols.shape
+    _req(
+        aligned and vals.shape[-1:] == rows.shape,
+        "field-shape",
+        f"rows/cols/vals must be aligned 1-d triplets, got "
+        f"{rows.shape}/{cols.shape}/{vals.shape}",
+        subject,
+    )
+    _req(
+        bool(np.all((rows >= 0) & (rows <= M))),
+        "indices-bounds",
+        f"rows must lie in [0, M={M}] (M marks padding)",
+        subject,
+    )
+    _req(
+        bool(np.all((cols >= 0) & (cols < max(N, 1)))),
+        "indices-bounds",
+        f"cols must lie in [0, N={N})",
+        subject,
+    )
+
+
+def _validate_symcsc(A, *, subject: str | None = None):
+    subject = subject or f"SymCSC{tuple(A.shape)}"
+    M, N = int(A.shape[0]), int(A.shape[1])
+    _req(
+        M == N,
+        "symcsc-square",
+        f"SymCSC requires a square shape, got {A.shape}",
+        subject,
+    )
+    diag = np.asarray(A.diag)
+    _req(
+        diag.shape[-1] == M,
+        "field-shape",
+        f"diag must have length M={M}, got shape {diag.shape}",
+        subject,
+    )
+    indices = np.asarray(A.indices)
+    indptr = np.asarray(A.indptr)
+    nnz = int(np.asarray(A.nnz))
+    _validate_compressed(
+        data=np.asarray(A.data),
+        indices=indices,
+        indptr=indptr,
+        nnz=nnz,
+        n_ptr=N + 1,
+        idx_bound=M,
+        sentinel=M,
+        subject=subject,
+        axis_name="column",
+    )
+    if nnz:
+        cols = np.repeat(np.arange(N), np.diff(indptr))
+        _req(
+            bool(np.all(indices[:nnz] < cols)),
+            "symcsc-strict-upper",
+            "SymCSC stores the strict upper triangle only, but an "
+            "entry has row >= col",
+            subject,
+        )
+
+
+def _validate_bsr(A, *, subject: str | None = None):
+    subject = subject or f"BSR{tuple(A.shape)}"
+    M, N = int(A.shape[0]), int(A.shape[1])
+    b = int(A.block)
+    data = np.asarray(A.data)
+    _req(
+        b >= 1 and M % b == 0 and N % b == 0,
+        "bsr-alignment",
+        f"shape {A.shape} is not divisible by block={b}",
+        subject,
+    )
+    _req(
+        data.ndim == 3 and data.shape[-2:] == (b, b),
+        "bsr-alignment",
+        f"data must be [nbmax, {b}, {b}] dense blocks, got shape "
+        f"{data.shape}",
+        subject,
+    )
+    Mb, Nb = M // b, N // b
+    _validate_compressed(
+        data=data[..., 0, 0],
+        indices=np.asarray(A.indices),
+        indptr=np.asarray(A.indptr),
+        nnz=int(np.asarray(A.nnz)),
+        n_ptr=Nb + 1,
+        idx_bound=Mb,
+        sentinel=Mb,
+        subject=subject,
+        axis_name="block column",
+    )
+
+
+def _validate_sharded_csc(A, *, subject: str | None = None):
+    subject = subject or f"ShardedCSC{tuple(A.shape)}"
+    N = int(A.shape[1])
+    data = np.asarray(A.data)
+    indices = np.asarray(A.indices)
+    indptr = np.asarray(A.indptr)
+    nnz = np.asarray(A.nnz)
+    _req(
+        indices.ndim == 2,
+        "field-shape",
+        f"indices must be int32[p, nzb], got shape {indices.shape}",
+        subject,
+    )
+    pnum = int(indices.shape[0])
+    _req(
+        data.shape[0] == pnum and data.shape[-1] == indices.shape[-1],
+        "field-shape",
+        f"data must be [p, (B,) nzb] aligned with indices, got "
+        f"{data.shape} vs {indices.shape}",
+        subject,
+    )
+    _req(
+        indptr.shape == (pnum, N + 1) and nnz.shape == (pnum,),
+        "field-shape",
+        "indptr/nnz must be per-block [p, N+1] / [p]",
+        subject,
+    )
+    rpb = int(A.rows_per_block)
+    for b in range(pnum):
+        _validate_compressed(
+            data=data[b],
+            indices=indices[b],
+            indptr=indptr[b],
+            nnz=int(nnz[b]),
+            n_ptr=N + 1,
+            idx_bound=rpb,
+            sentinel=rpb,
+            subject=f"{subject}[block {b}]",
+            axis_name="column",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Lazy registration (class imports deferred so this module stays cheap
+# to import from low-level call sites)
+# ---------------------------------------------------------------------------
+_REGISTERED = False
+
+
+def _ensure_registered() -> None:
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    from ...core.coo import COO
+    from ...core.csc import CSC
+    from ..formats import BSR, CSR, SymCSC
+    from ..pattern import SparsePattern, SymPattern
+    from ..sharded import ShardedCSC, ShardedPattern
+    from ..spgemm import ProductPattern
+
+    _PATTERN_VALIDATORS.setdefault(SparsePattern, _validate_sparse_pattern)
+    _PATTERN_VALIDATORS.setdefault(SymPattern, _validate_sym_pattern)
+    _PATTERN_VALIDATORS.setdefault(ProductPattern, _validate_product_pattern)
+    _PATTERN_VALIDATORS.setdefault(ShardedPattern, _validate_sharded_pattern)
+    _MATRIX_VALIDATORS.setdefault(CSC, _validate_csc)
+    _MATRIX_VALIDATORS.setdefault(CSR, _validate_csr)
+    _MATRIX_VALIDATORS.setdefault(COO, _validate_coo)
+    _MATRIX_VALIDATORS.setdefault(SymCSC, _validate_symcsc)
+    _MATRIX_VALIDATORS.setdefault(BSR, _validate_bsr)
+    _MATRIX_VALIDATORS.setdefault(ShardedCSC, _validate_sharded_csc)
+    _REGISTERED = True

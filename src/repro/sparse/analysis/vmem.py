@@ -1,0 +1,95 @@
+"""Pallas VMEM budget lint: the pass/fallback frontier as a table.
+
+Every kernel family guards its Pallas path with a static residency
+check against the shared 8 MB cap
+(:data:`repro.kernels.segment_sum.ops.FUSED_RESIDENT_MAX_BYTES`); past
+the cap the XLA fallback runs instead.  Those decisions are pure
+functions of static shapes, so there is no reason to discover them at
+runtime: each family exports a ``*_vmem_spec`` helper mirroring its
+guard bit-for-bit, and this module sweeps them over a representative
+shape grid into one report — the table the ROADMAP item-3 autotuner
+will consume when it starts mutating tile sizes and residency
+thresholds.
+
+Row schema (one dict per (family, shape) point)::
+
+    {"family": str, "params": {...}, "resident_bytes": int,
+     "budget_bytes": int, "fits": bool, "path": str}
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = ["dump_json", "format_table", "vmem_report"]
+
+#: stream lengths swept per family — spans both sides of the 8 MB
+#: frontier (2^21 f32 elements) up to Table 4.2 scale-1.0 sizes.
+DEFAULT_LENGTHS = (10_000, 1_000_000, 2_097_152, 4_000_000, 50_000_000)
+#: dense-vector lengths for the SpMV families (x resident).
+DEFAULT_DIMS = (10_000, 1_000_000, 2_097_152, 4_000_000)
+
+
+def vmem_report(
+    *,
+    lengths=DEFAULT_LENGTHS,
+    dims=DEFAULT_DIMS,
+    dtypes=("float32", "bfloat16"),
+) -> list[dict]:
+    """Sweep every kernel family's static residency spec over a grid."""
+    from ...kernels.merge.ops import merge_vmem_spec
+    from ...kernels.radix_sort.ops import radix_vmem_spec
+    from ...kernels.segment_sum.ops import fill_vmem_spec, spgemm_vmem_spec
+    from ...kernels.spmv_sym.ops import bsr_vmem_spec, sym_vmem_spec
+
+    rows: list[dict] = []
+    for dtype in dtypes:
+        for L in lengths:
+            rows.append(fill_vmem_spec(L, dtype))
+            rows.append(spgemm_vmem_spec(L // 2, L // 2, dtype))
+        for M in dims:
+            rows.append(sym_vmem_spec(M, dtype))
+            rows.append(bsr_vmem_spec(M, 2, dtype))
+    for L in lengths:
+        rows.append(merge_vmem_spec(L))
+        rows.append(radix_vmem_spec(L, L, L))
+    return rows
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.1f}M"
+    if n >= 1 << 10:
+        return f"{n / (1 << 10):.1f}K"
+    return str(n)
+
+
+def format_table(rows: list[dict]) -> str:
+    """Render report rows as an aligned text table."""
+    header = ("family", "params", "resident", "budget", "path")
+    table = [header]
+    for r in rows:
+        params = ",".join(f"{k}={v}" for k, v in r["params"].items())
+        path = r["path"] + ("" if r["fits"] else "  (over budget)")
+        row = (
+            r["family"],
+            params,
+            _fmt_bytes(r["resident_bytes"]),
+            _fmt_bytes(r["budget_bytes"]),
+            path,
+        )
+        table.append(row)
+    widths = [max(len(row[i]) for row in table) for i in range(len(header))]
+    lines = [
+        "  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip()
+        for row in table
+    ]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def dump_json(rows: list[dict], path: str) -> None:
+    """Write the report as JSON (the autotuner-consumable artifact)."""
+    with open(path, "w") as fh:
+        json.dump({"vmem_report": rows}, fh, indent=2, sort_keys=True)
+        fh.write("\n")

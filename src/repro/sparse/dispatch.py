@@ -42,6 +42,8 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from .errors import FallbackWarning
+
 PermFn = Callable[..., jax.Array]
 
 _METHODS: Dict[str, PermFn] = {}
@@ -152,7 +154,7 @@ def _perm_fused(rows, cols, *, M: int, N: int) -> jax.Array:
                 "to the two-pass 'jnp' sort. Enable jax_enable_x64 or use "
                 "method='radix' (no overflow regime) to keep a bounded "
                 "pass count.",
-                RuntimeWarning,
+                FallbackWarning,
                 stacklevel=2,
             )
         return _perm_jnp(rows, cols, M=M, N=N)

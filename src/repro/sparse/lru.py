@@ -26,15 +26,33 @@ Design points:
 * **Capacity.**  Fixed at construction, overridable by an environment
   variable (``env=``, e.g. ``REPRO_PLAN_CACHE_SIZE``) read at cache
   creation, and adjustable at runtime with :meth:`resize`.
+* **Lock sanitizer.**  ``REPRO_LOCK_SANITIZE=1`` (or
+  ``sanitize=True``) turns on owner/depth tracking of every lock
+  acquisition: re-entrant holds are counted, and a
+  :meth:`get_or_create` miss while the calling thread already holds
+  this cache's lock raises
+  :class:`~repro.sparse.errors.InvariantViolation` named
+  ``lock-discipline`` — the hold-across-plan bug (planning under the
+  cache lock serializes every request) detected at the exact call
+  site instead of showing up as tail latency.  Off by default: the
+  tracking costs two attribute writes per acquisition.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Iterable, Tuple
 
+from .errors import InvariantViolation
+
 __all__ = ["LRUCache", "env_capacity"]
+
+
+def _env_sanitize() -> bool:
+    return os.environ.get("REPRO_LOCK_SANITIZE", "") \
+        not in ("", "0", "false", "off")
 
 
 def env_capacity(var: str | None, default: int) -> int:
@@ -64,7 +82,7 @@ class LRUCache:
     """Locked LRU with hit/miss/eviction/insertion counters."""
 
     def __init__(self, capacity: int, *, name: str = "lru",
-                 env: str | None = None):
+                 env: str | None = None, sanitize: bool | None = None):
         self.name = name
         self._capacity = env_capacity(env, capacity)
         if self._capacity < 1:
@@ -75,11 +93,42 @@ class LRUCache:
         self._misses = 0
         self._evictions = 0
         self._insertions = 0
+        self._sanitize = _env_sanitize() if sanitize is None \
+            else bool(sanitize)
+        self._owner: int | None = None   # sanitizer: holding thread id
+        self._depth = 0                  # sanitizer: re-entrant hold depth
+        self._reentries = 0
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """``self._lock`` plus owner/depth bookkeeping in sanitize mode."""
+        with self._lock:
+            if not self._sanitize:
+                yield
+                return
+            me = threading.get_ident()
+            self._reentries += self._owner == me
+            self._owner = me
+            self._depth += 1
+            try:
+                yield
+            finally:
+                self._depth -= 1
+                if self._depth == 0:
+                    self._owner = None
+
+    def holds_lock(self) -> bool:
+        """True when the current thread holds this cache's lock.
+
+        Only meaningful in sanitize mode, where acquisitions through
+        the cache's own methods track ownership; always False otherwise.
+        """
+        return self._sanitize and self._owner == threading.get_ident()
 
     # -- core --------------------------------------------------------------
     def get(self, key: Hashable, default: Any = None) -> Any:
         """Lookup + recency bump; counts a hit or a miss."""
-        with self._lock:
+        with self._locked():
             try:
                 val = self._data[key]
             except KeyError:
@@ -96,7 +145,7 @@ class LRUCache:
         another thread inserted first (first insert wins; see module
         docstring), else ``value``.
         """
-        with self._lock:
+        with self._locked():
             existing = self._data.get(key)
             if existing is not None:
                 self._data.move_to_end(key)
@@ -110,7 +159,7 @@ class LRUCache:
 
     def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
         """Hit, or run ``factory`` (unlocked) and insert its result."""
-        with self._lock:
+        with self._locked():
             try:
                 val = self._data[key]
             except KeyError:
@@ -122,6 +171,15 @@ class LRUCache:
         # outside the lock: planning/compiling concurrently for
         # *different* keys must not serialize; a same-key race is
         # resolved by insert() (first in wins, loser adopts)
+        if self.holds_lock():
+            raise InvariantViolation(
+                "lock-discipline",
+                f"cache {self.name!r}: get_or_create factory would run "
+                f"while the calling thread still holds this cache's "
+                f"lock — planning under the cache lock serializes every "
+                f"request; call get_or_create outside the lock scope",
+                subject=self.name,
+            )
         return self.insert(key, factory())
 
     def pop(self, key: Hashable, default: Any = None) -> Any:
@@ -131,7 +189,7 @@ class LRUCache:
         delta update), not capacity pressure — so it does not count as
         an eviction and touches no metric counters.
         """
-        with self._lock:
+        with self._locked():
             return self._data.pop(key, default)
 
     def purge(self, predicate: Callable[[Hashable], bool]) -> int:
@@ -142,7 +200,7 @@ class LRUCache:
         capacity behavior.  ``predicate`` runs under the lock: keep it
         cheap and never have it re-enter the cache.
         """
-        with self._lock:
+        with self._locked():
             doomed = [k for k in self._data if predicate(k)]
             for k in doomed:
                 del self._data[k]
@@ -150,22 +208,27 @@ class LRUCache:
 
     # -- introspection / management ---------------------------------------
     def __len__(self) -> int:
-        with self._lock:
+        with self._locked():
             return len(self._data)
 
     def __contains__(self, key: Hashable) -> bool:
-        with self._lock:
+        with self._locked():
             return key in self._data
 
     def items(self) -> Iterable[Tuple[Hashable, Any]]:
         """Snapshot of (key, value) pairs, LRU-first (for persistence)."""
-        with self._lock:
+        with self._locked():
             return list(self._data.items())
 
     def info(self) -> dict:
-        """Size/capacity (the historical keys) + the serving metrics."""
-        with self._lock:
-            return {
+        """Size/capacity (the historical keys) + the serving metrics.
+
+        In sanitize mode two extra keys report the lock sanitizer's
+        observations (``lock_reentries``); the default dict shape is
+        unchanged so existing dashboards keep parsing.
+        """
+        with self._locked():
+            out = {
                 "size": len(self._data),
                 "capacity": self._capacity,
                 "hits": self._hits,
@@ -173,12 +236,16 @@ class LRUCache:
                 "evictions": self._evictions,
                 "insertions": self._insertions,
             }
+            if self._sanitize:
+                out["lock_sanitize"] = True
+                out["lock_reentries"] = self._reentries
+            return out
 
     def resize(self, capacity: int) -> None:
         """Change capacity; evicts LRU-first if shrinking below size."""
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
-        with self._lock:
+        with self._locked():
             self._capacity = capacity
             while len(self._data) > self._capacity:
                 self._data.popitem(last=False)
@@ -186,7 +253,7 @@ class LRUCache:
 
     def clear(self) -> None:
         """Drop all entries and reset the metric counters."""
-        with self._lock:
+        with self._locked():
             self._data.clear()
             self._hits = self._misses = 0
             self._evictions = self._insertions = 0

@@ -59,6 +59,7 @@ import numpy as np
 from ..core.coo import COO
 from ..core.csc import CSC
 from .dispatch import merge_search, sorted_permutation
+from .errors import CapacityWarning
 
 #: duplicate-combination modes of the numeric phase.  ``"sum"`` is the
 #: Matlab ``sparse`` contract; the rest mirror ``accumarray`` with
@@ -309,9 +310,9 @@ class SparsePattern:
             fallback = True
         bump = dict(accum=self.accum, epoch=self.epoch + 1)
         if L_new == 0:
-            return dataclasses.replace(
+            return _maybe_validated(dataclasses.replace(
                 trivial_pattern(0, (M, N), nzmax=new_nzmax), **bump
-            )
+            ))
         if L == 0 or M == 0 or N == 0:
             # trivial base: nothing to merge against (an empty stream)
             # or a zero-dim shape where structure is key-independent —
@@ -323,7 +324,7 @@ class SparsePattern:
                 jnp.asarray(np.concatenate([cols0[keep], ac])),
                 (M, N), nzmax=new_nzmax, method=method,
             )
-            return dataclasses.replace(pat, **bump)
+            return _maybe_validated(dataclasses.replace(pat, **bump))
         if fallback:
             global _UPDATE_FALLBACK_WARNED
             if not _UPDATE_FALLBACK_WARNED:
@@ -336,7 +337,7 @@ class SparsePattern:
                     "Pre-reserve capacity with plan(..., nzmax_slack=) "
                     "(or fsparse/sparse2 nzmax_slack=) to keep updates "
                     "on the O(L + L_delta) merge path.",
-                    RuntimeWarning,
+                    CapacityWarning,
                     stacklevel=2,
                 )
             rows0, cols0 = self._input_keys()
@@ -346,7 +347,7 @@ class SparsePattern:
                 jnp.asarray(np.concatenate([cols0[keep], ac])),
                 (M, N), nzmax=new_nzmax, method=method,
             )
-            return dataclasses.replace(pat, **bump)
+            return _maybe_validated(dataclasses.replace(pat, **bump))
         # -- merge path: survivors stay sorted, only the delta sorts ----
         if dm is None:
             sr_a, sc_a, pa = self.srows, self.scols, self.perm
@@ -370,7 +371,7 @@ class SparsePattern:
             jnp.int32(L_keep), M=M, N=N, nzmax=new_nzmax,
             method=method, merge_method=merge_method,
         )
-        return dataclasses.replace(pat, **bump)
+        return _maybe_validated(dataclasses.replace(pat, **bump))
 
 
 def fill_dtype(vals) -> jnp.dtype:
@@ -668,6 +669,21 @@ def _reset_update_fallback_warning() -> None:
     """Test hook: re-arm the one-time update-fallback warning."""
     global _UPDATE_FALLBACK_WARNED
     _UPDATE_FALLBACK_WARNED = False
+
+
+def _maybe_validated(pat: "SparsePattern") -> "SparsePattern":
+    """``REPRO_VALIDATE=1`` hook: check rewritten plans on the way out.
+
+    A no-op by default; under the env flag every non-trivial return of
+    :meth:`SparsePattern.update` runs the structural validators
+    (:mod:`repro.sparse.analysis.invariants`) so a merge-path bug
+    surfaces as a named ``InvariantViolation`` at the rewrite, not as a
+    wrong fill three calls later.  Imported lazily — the analysis layer
+    depends on this module.
+    """
+    from .analysis.invariants import maybe_validate_pattern
+
+    return maybe_validate_pattern(pat, subject="SparsePattern.update")
 
 
 @partial(jax.jit, static_argnames=("M", "N", "nzmax", "method",

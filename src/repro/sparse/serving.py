@@ -73,6 +73,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.csc import CSC
+from .analysis.invariants import maybe_validate_pattern, validate_pattern
+from .errors import CacheCorruptionWarning, InvariantViolation
 from .formats import convert
 from .lru import LRUCache
 from .matlab import plan_cache_info, plan_lookup, plan_update, _PLAN_CACHE
@@ -263,27 +265,47 @@ def load_caches(cache_dir) -> tuple:
     """Load persisted entries back into the in-memory caches.
 
     Returns ``(plans, products)`` counts.  Corrupt/unreadable files are
-    skipped with a warning — a damaged cache entry must degrade to a
-    re-plan, never to a crash.
+    skipped with a :class:`~repro.sparse.errors.CacheCorruptionWarning`
+    — a damaged cache entry must degrade to a re-plan, never to a
+    crash.  Every entry that *does* unpickle is run through the
+    structural validators (:mod:`repro.sparse.analysis.invariants`)
+    before insertion, unconditionally: a tampered pickle that still
+    deserializes is detected by the invariant it breaks, not served.
     """
     cache_dir = Path(cache_dir)
     counts = {"plan": 0, "product": 0}
     if not cache_dir.is_dir():
         return (0, 0)
     targets = {"plan": _PLAN_CACHE, "product": _PRODUCT_CACHE}
+    expected = {"plan": SparsePattern, "product": ProductPattern}
     for path in sorted(cache_dir.glob("*.pkl")):
         try:
             with open(path, "rb") as f:
                 payload = pickle.load(f)
             kind = payload["kind"]
-            targets[kind].insert(payload["key"],
-                                 _device_tree(payload["value"]))
+            value = _device_tree(payload["value"])
+            if not isinstance(value, expected[kind]):
+                raise InvariantViolation(
+                    "entry-schema",
+                    f"{kind} entry holds a "
+                    f"{type(value).__name__}, expected "
+                    f"{expected[kind].__name__}",
+                    subject=path.name,
+                )
+            validate_pattern(value, subject=path.name)
+            targets[kind].insert(payload["key"], value)
             counts[kind] += 1
+        except InvariantViolation as e:
+            warnings.warn(
+                f"skipping invalid plan-cache entry {path.name}: {e}",
+                CacheCorruptionWarning,
+                stacklevel=2,
+            )
         except Exception as e:  # noqa: BLE001 - degrade to re-plan
             warnings.warn(
                 f"skipping unreadable plan-cache entry {path.name}: "
                 f"{type(e).__name__}: {e}",
-                RuntimeWarning,
+                CacheCorruptionWarning,
                 stacklevel=2,
             )
     return (counts["plan"], counts["product"])
@@ -358,7 +380,7 @@ class PlanService:
             warnings.warn(
                 f"could not persist {kind} cache entry: "
                 f"{type(e).__name__}: {e}",
-                RuntimeWarning,
+                CacheCorruptionWarning,
                 stacklevel=2,
             )
 
@@ -442,6 +464,7 @@ class PlanService:
             # sharded plans run their own distributed fill (no AOT tier:
             # executables would pin one mesh layout per entry)
             return pat.assemble(coo.vals)
+        maybe_validate_pattern(pat, subject="PlanService.assemble")
         self._persist("plan", key, pat)
         fill = self._fill_executable(key, pat, coo.vals.shape,
                                      coo.vals.dtype)
@@ -538,6 +561,8 @@ class PlanService:
 
             self._execs.purge(_stale)
             self._retire_persisted(res.old_key, old_sk)
+        maybe_validate_pattern(res.pattern,
+                               subject="PlanService.update_structure")
         self._persist("plan", res.key, res.pattern)
         fill = self._fill_executable(res.key, res.pattern,
                                      res.coo.vals.shape,
@@ -557,6 +582,7 @@ class PlanService:
         Bc = convert(B, "csc")
         key, pp = product_lookup(Ac, Bc, method=method, nzmax=nzmax,
                                  flops_max=flops_max)
+        maybe_validate_pattern(pp, subject="PlanService.multiply")
         self._persist("product", key, pp)
         ekey = ("multiply", key, Ac.data.dtype.str, Bc.data.dtype.str)
 

@@ -14,7 +14,6 @@
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -50,7 +49,9 @@ def lr_at(cfg: OptConfig, step):
 
 def init_opt_state(params, cfg: OptConfig) -> dict[str, Any]:
     del cfg
-    f32 = lambda p: p.astype(jnp.float32)
+    def f32(p):
+        return p.astype(jnp.float32)
+
     return {
         "master": jax.tree.map(f32, params),
         "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),

@@ -14,7 +14,6 @@ Gradient flow at scale (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -1,0 +1,485 @@
+"""The static-analysis & sanitizer layer (``repro.sparse.analysis``).
+
+Covers the four layers plus the satellites that ride on them:
+
+* structural validators — valid structures pass through unchanged,
+  seeded corruptions are each rejected with the *named* invariant;
+* cache-load sanitization — truncated / tampered / schema-lying
+  pickles are skipped with a ``CacheCorruptionWarning`` and never
+  served;
+* the jaxpr contract auditor (16-bit accumulation, host callbacks,
+  output dtype) and the :class:`RetraceAuditor`;
+* the VMEM residency report and the shared-state concurrency lint;
+* the ``ReproWarning`` hierarchy and the pinned sharded-path
+  rejection messages;
+* the ``python -m repro.sparse.analysis`` CLI driver.
+"""
+import dataclasses
+import pickle
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import (
+    CacheCorruptionWarning,
+    CapacityWarning,
+    FallbackWarning,
+    InvariantViolation,
+    ReproWarning,
+    convert,
+    dispatch,
+    plan,
+    plan_cache_clear,
+    plan_sharded,
+    plan_symmetric,
+    product_cache_clear,
+    serving,
+    trivial_pattern,
+    validate_matrix,
+    validate_pattern,
+)
+from repro.sparse.analysis import (
+    RetraceAuditor,
+    audit_jaxpr,
+    format_findings,
+    format_table,
+    lint_shared_state,
+    maybe_validate_pattern,
+    validation_enabled,
+    validator_for_format,
+    vmem_report,
+)
+from repro.sparse.analysis.__main__ import main as analysis_main
+from repro.sparse.pattern import _reset_update_fallback_warning
+from repro.sparse.spgemm import product_plan
+
+# the representative structure: 4x4, one duplicate at (2,2),
+# structurally symmetric, block-2 aligned
+ROWS = np.array([0, 1, 0, 2, 2, 2, 3])
+COLS = np.array([0, 0, 1, 2, 2, 3, 2])
+
+
+@pytest.fixture()
+def pat():
+    return plan(ROWS, COLS, (4, 4))
+
+
+@pytest.fixture()
+def A(pat):
+    return pat.assemble(jnp.ones((ROWS.size,), jnp.float32))
+
+
+@pytest.fixture()
+def fresh_caches():
+    plan_cache_clear()
+    product_cache_clear()
+    yield
+    plan_cache_clear()
+    product_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Valid structures pass through unchanged
+# ---------------------------------------------------------------------------
+def test_valid_structures_validate_clean(pat, A):
+    assert validate_pattern(pat) is pat
+    assert validate_pattern(trivial_pattern(0, (3, 3))) is not None
+    assert validate_pattern(plan_symmetric(ROWS, COLS, (4, 4))) is not None
+    pp = product_plan(A, A)
+    assert validate_pattern(pp) is pp
+    assert validate_matrix(A) is A
+    for fmt in ("csr", "coo", "symcsc"):
+        validate_matrix(convert(A, fmt))
+    validate_matrix(convert(A, "bsr", block=2))
+
+
+def test_validator_for_format_dispatch(A):
+    assert validator_for_format("csc")(A) is None  # raises on failure
+    with pytest.raises(KeyError):
+        validator_for_format("no-such-format")
+
+
+# ---------------------------------------------------------------------------
+# Seeded corruptions: each caught with the right invariant name
+# ---------------------------------------------------------------------------
+def _corruption(pat, invariant):
+    """One mutated field per named invariant (the validator must fire
+    on exactly that name, not a downstream symptom)."""
+    if invariant == "indptr-monotone":
+        indptr = np.asarray(pat.indptr).copy()
+        indptr[1], indptr[2] = indptr[2], indptr[1]
+        return dict(indptr=jnp.asarray(indptr))
+    if invariant == "perm-permutation":
+        perm = np.asarray(pat.perm).copy()
+        perm[0] = perm[1]
+        return dict(perm=jnp.asarray(perm))
+    if invariant == "slot-bounds":
+        return dict(slot=pat.slot.at[0].set(pat.nzmax + 3))
+    if invariant == "epoch-valid":
+        return dict(epoch=-1)
+    if invariant == "nzmax-capacity":
+        return dict(nnz=jnp.asarray(pat.nzmax + 1, jnp.int32))
+    if invariant == "padding-sentinel":
+        return dict(indices=pat.indices.at[-1].set(0))
+    if invariant == "indices-bounds":
+        return dict(indices=pat.indices.at[0].set(-1))
+    if invariant == "stream-key-bounds":
+        return dict(scols=pat.scols.at[0].set(99))
+    if invariant == "stream-sorted":
+        srows = np.asarray(pat.srows).copy()
+        srows[0], srows[1] = srows[1], srows[0]
+        return dict(srows=jnp.asarray(srows))
+    raise AssertionError(invariant)
+
+
+@pytest.mark.parametrize("invariant", [
+    "indptr-monotone",
+    "perm-permutation",
+    "slot-bounds",
+    "epoch-valid",
+    "nzmax-capacity",
+    "padding-sentinel",
+    "indices-bounds",
+    "stream-key-bounds",
+    "stream-sorted",
+])
+def test_seeded_corruption_rejected_by_name(pat, invariant):
+    bad = dataclasses.replace(pat, **_corruption(pat, invariant))
+    with pytest.raises(InvariantViolation) as ei:
+        validate_pattern(bad, subject="seeded")
+    assert ei.value.invariant == invariant
+    assert ei.value.subject == "seeded"
+    assert f"invariant {invariant!r} violated on seeded" in str(ei.value)
+
+
+def test_symcsc_lower_triangle_entry_rejected(A):
+    S = validate_matrix(convert(A, "symcsc"))
+    # the first stored strict-upper entry is (0, 1); move its row onto
+    # the diagonal so row >= col
+    bad = dataclasses.replace(S, indices=S.indices.at[0].set(1))
+    with pytest.raises(InvariantViolation) as ei:
+        validate_matrix(bad)
+    assert ei.value.invariant == "symcsc-strict-upper"
+
+
+def test_bsr_misalignment_rejected(A):
+    B = validate_matrix(convert(A, "bsr", block=2))
+    with pytest.raises(InvariantViolation) as ei:
+        validate_matrix(dataclasses.replace(B, block=3))
+    assert ei.value.invariant == "bsr-alignment"
+
+
+def test_sym_pattern_selector_out_of_range(pat):
+    sp = plan_symmetric(ROWS, COLS, (4, 4))
+    bad = dataclasses.replace(sp, drow=sp.drow.at[0].set(7))
+    with pytest.raises(InvariantViolation) as ei:
+        validate_pattern(bad)
+    assert ei.value.invariant == "selector-bounds"
+
+
+# ---------------------------------------------------------------------------
+# The REPRO_VALIDATE gate
+# ---------------------------------------------------------------------------
+def test_repro_validate_gate(monkeypatch, pat):
+    bad = dataclasses.replace(pat, epoch=-1)
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    assert not validation_enabled()
+    assert maybe_validate_pattern(bad) is bad        # gate off: no check
+    for off in ("0", "false", "off", ""):
+        monkeypatch.setenv("REPRO_VALIDATE", off)
+        assert not validation_enabled()
+    monkeypatch.setenv("REPRO_VALIDATE", "1")
+    assert validation_enabled()
+    with pytest.raises(InvariantViolation, match="epoch-valid"):
+        maybe_validate_pattern(bad)
+    assert maybe_validate_pattern(pat) is pat
+
+
+def test_update_validates_result_under_gate(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE", "1")
+    base = plan(ROWS, COLS, (4, 4), nzmax_slack=4)
+    got = base.update(np.array([3]), np.array([3]))
+    assert got.epoch == 1                            # validated clean
+
+
+# ---------------------------------------------------------------------------
+# Cache-load sanitization: corrupt pickles degrade to a re-plan
+# ---------------------------------------------------------------------------
+def test_load_caches_rejects_corrupt_entries(tmp_path, pat, fresh_caches):
+    good = serving._write_entry(tmp_path, "plan", ("good",), pat)
+    # truncated pickle: unreadable
+    raw = good.read_bytes()
+    (tmp_path / "plan-truncated.pkl").write_bytes(raw[: len(raw) // 2])
+    # tampered-but-deserializable: duplicated perm entry inside the value
+    perm = np.asarray(pat.perm).copy()
+    perm[0] = perm[1]
+    tampered = dataclasses.replace(pat, perm=jnp.asarray(perm))
+    serving._write_entry(tmp_path, "plan", ("tampered",), tampered)
+    # schema lie: a plan entry holding a non-pattern payload
+    with open(tmp_path / "plan-notapattern.pkl", "wb") as f:
+        pickle.dump({"kind": "plan", "key": ("alien",), "value": 42}, f)
+
+    with pytest.warns(CacheCorruptionWarning) as rec:
+        plans, products = serving.load_caches(tmp_path)
+    assert (plans, products) == (1, 0)               # only the good entry
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, CacheCorruptionWarning)]
+    assert len(msgs) == 3
+    assert any(
+        "unreadable plan-cache entry plan-truncated.pkl" in m for m in msgs
+    )
+    assert any(
+        "invalid plan-cache entry" in m and "perm-permutation" in m
+        for m in msgs
+    )
+    assert any("entry-schema" in m for m in msgs)
+
+
+def test_load_caches_roundtrip_still_validates(tmp_path, pat, fresh_caches):
+    serving._write_entry(tmp_path, "plan", ("k",), pat)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")               # must stay silent
+        assert serving.load_caches(tmp_path) == (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Pinned sharded-path rejection messages
+# ---------------------------------------------------------------------------
+def test_sharded_update_message_pinned():
+    sp = plan_sharded(ROWS, COLS, (4, 4))
+    with pytest.raises(NotImplementedError) as ei:
+        sp.update(np.array([1]), np.array([1]))
+    assert str(ei.value) == (
+        "ShardedPattern.update: incremental deltas are not yet "
+        "routed per row block — re-plan with plan_sharded(...) over "
+        "the concatenated triplets, or assemble unsharded and use "
+        "SparsePattern.update"
+    )
+
+
+def test_plan_sharded_symmetric_message_pinned():
+    with pytest.raises(NotImplementedError) as ei:
+        plan_sharded(ROWS, COLS, (4, 4), symmetric=True)
+    assert str(ei.value) == (
+        "plan_sharded(symmetric=True) is not supported: the "
+        "block-row partition has no mirrored-entry router yet, so "
+        "a symmetric plan would silently stream the full structure "
+        "twice; fall back to the plain-CSC sharded plan "
+        "(symmetric=False), or use plan_symmetric on one device"
+    )
+
+
+def test_plan_symmetric_accum_message_pinned():
+    with pytest.raises(NotImplementedError) as ei:
+        plan_symmetric(ROWS, COLS, (4, 4), accum="max")
+    assert str(ei.value) == (
+        "plan_symmetric supports accum='sum' only (got 'max'); "
+        "use plan() for the plain-CSC fallback"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr contract auditor
+# ---------------------------------------------------------------------------
+def test_audit_flags_16bit_accumulation():
+    closed = jax.make_jaxpr(jnp.cumsum)(jnp.ones((4,), jnp.bfloat16))
+    with pytest.raises(InvariantViolation) as ei:
+        audit_jaxpr(closed, name="bf16-cumsum")
+    assert ei.value.invariant == "16-bit-accumulation"
+    assert ei.value.subject == "bf16-cumsum"
+
+
+def test_audit_flags_host_callbacks():
+    def noisy(x):
+        jax.debug.print("x = {}", x)
+        return x + 1.0
+
+    closed = jax.make_jaxpr(noisy)(1.0)
+    with pytest.raises(InvariantViolation, match="host-callback"):
+        audit_jaxpr(closed)
+    # the same jaxpr passes with the check opted out
+    report = audit_jaxpr(closed, forbid_callbacks=False)
+    assert report["ok"] is True
+
+
+def test_audit_flags_output_dtype():
+    closed = jax.make_jaxpr(lambda x: x.astype(jnp.bfloat16))(
+        jnp.ones((3,), jnp.float32)
+    )
+    with pytest.raises(InvariantViolation) as ei:
+        audit_jaxpr(closed, expect_dtype=jnp.float32)
+    assert ei.value.invariant == "output-dtype"
+
+
+def test_audit_recurses_into_subjaxprs():
+    def scanned(x):
+        def body(carry, _):
+            return carry + jnp.cumsum(x), None
+
+        out, _ = jax.lax.scan(body, x, None, length=2)
+        return out
+
+    closed = jax.make_jaxpr(scanned)(jnp.ones((4,), jnp.bfloat16))
+    with pytest.raises(InvariantViolation, match="16-bit-accumulation"):
+        audit_jaxpr(closed, name="scan-body")
+
+
+def test_fill_path_audits_clean(pat):
+    vals = jnp.ones((pat.L,), jnp.bfloat16)
+    closed = jax.make_jaxpr(lambda v: pat.scatter(v))(vals)
+    report = audit_jaxpr(closed, name="fill[bf16]",
+                         expect_dtype=jnp.bfloat16)
+    assert report["ok"] and report["eqns"] > 0
+
+
+def test_retrace_auditor_counts_traces():
+    auditor = RetraceAuditor()
+    f = auditor.instrument(lambda x: x * 2.0)
+    f(jnp.ones((3,)))
+    f(jnp.zeros((3,)))                               # same shape: cached
+    auditor.expect(1, what="same-shape calls")
+    f(jnp.ones((5,)))                                # new shape: retrace
+    auditor.expect(2, what="after a shape change")
+    with pytest.raises(InvariantViolation) as ei:
+        auditor.expect(7, what="deliberate mismatch")
+    assert ei.value.invariant == "retrace-count"
+    auditor.reset()
+    assert auditor.count == 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM residency report
+# ---------------------------------------------------------------------------
+def test_vmem_report_covers_every_family():
+    rows = vmem_report()
+    families = {r["family"] for r in rows}
+    assert families == {
+        "fill_fused", "spgemm_fused", "merge_search", "radix_sort",
+        "spmv_sym", "spmv_bsr",
+    }
+    for r in rows:
+        assert r["resident_bytes"] >= 0 and r["budget_bytes"] > 0
+        assert r["fits"] == (r["resident_bytes"] <= r["budget_bytes"])
+    # the sweep must span both sides of the fill frontier
+    fill = [r for r in rows if r["family"] == "fill_fused"]
+    assert any(r["fits"] for r in fill)
+    assert any(not r["fits"] for r in fill)
+    # radix is planner-enforced: no fallback regime at any size
+    assert all(r["fits"] for r in rows if r["family"] == "radix_sort")
+
+
+def test_vmem_spec_mirrors_fill_guard():
+    from repro.kernels.segment_sum.ops import (
+        FUSED_RESIDENT_MAX_BYTES,
+        fill_vmem_spec,
+    )
+
+    edge = FUSED_RESIDENT_MAX_BYTES // 4             # f32 accumulator
+    assert fill_vmem_spec(edge)["fits"]
+    assert fill_vmem_spec(edge)["path"] == "pallas-fused"
+    assert not fill_vmem_spec(edge + 1)["fits"]
+    assert fill_vmem_spec(edge + 1)["path"] == "xla-blocked-cumsum"
+    # bf16 streams accumulate in f32: same frontier as f32
+    assert fill_vmem_spec(edge, jnp.bfloat16)["fits"]
+    assert not fill_vmem_spec(edge + 1, jnp.bfloat16)["fits"]
+
+
+def test_vmem_table_renders():
+    rows = vmem_report(lengths=(10_000, 4_000_000), dims=(10_000,))
+    table = format_table(rows)
+    lines = table.splitlines()
+    assert lines[0].split()[:2] == ["family", "params"]
+    assert "(over budget)" in table
+
+
+# ---------------------------------------------------------------------------
+# Concurrency lint
+# ---------------------------------------------------------------------------
+def test_concurrency_lint_repo_clean():
+    findings = lint_shared_state()
+    assert findings == [], format_findings(findings)
+    assert format_findings(findings) == "concurrency lint: clean"
+
+
+def test_concurrency_lint_flags_unlocked_mutation(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text(textwrap.dedent("""\
+        import threading
+        _CACHE = {}
+        _LOCK = threading.Lock()
+        _INIT_OK = {}
+        _INIT_OK["warm"] = 1          # import-time: exempt
+
+        def good(k, v):
+            with _LOCK:
+                _CACHE[k] = v
+
+        def bad_store(k, v):
+            _CACHE[k] = v
+
+        def bad_mutator(k):
+            _CACHE.pop(k, None)
+    """))
+    findings = lint_shared_state(paths=[mod])
+    assert [(f["name"], f["line"]) for f in findings] == [
+        ("_CACHE", 12), ("_CACHE", 15),
+    ]
+    assert "subscript store" in findings[0]["reason"]
+    assert ".pop()" in findings[1]["reason"]
+    assert str(mod) in format_findings(findings)
+
+
+# ---------------------------------------------------------------------------
+# Warning hierarchy (satellite a)
+# ---------------------------------------------------------------------------
+def test_warning_hierarchy():
+    for w in (FallbackWarning, CapacityWarning, CacheCorruptionWarning):
+        assert issubclass(w, ReproWarning)
+        assert issubclass(w, RuntimeWarning)         # back-compat base
+    assert issubclass(ReproWarning, RuntimeWarning)
+
+
+def test_fused_overflow_emits_fallback_warning():
+    dispatch._reset_fused_fallback_warning()
+    try:
+        with pytest.warns(FallbackWarning, match="overflows int32"):
+            dispatch.sorted_permutation(
+                np.array([0], np.int32), np.array([1], np.int32),
+                M=46341, N=46341, method="fused",
+            )
+    finally:
+        dispatch._reset_fused_fallback_warning()
+
+
+def test_update_fallback_emits_capacity_warning():
+    base = plan(np.array([0, 1]), np.array([0, 1]), (3, 3))
+    _reset_update_fallback_warning()
+    try:
+        with pytest.warns(CapacityWarning, match="nzmax_slack"):
+            base.update(np.array([2]), np.array([2]))
+    finally:
+        _reset_update_fallback_warning()
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+def test_cli_vmem_json(tmp_path, capsys):
+    import json
+
+    out = tmp_path / "vmem.json"
+    assert analysis_main(["--vmem", "--json", str(out)]) == 0
+    assert "family" in capsys.readouterr().out
+    report = json.loads(out.read_text())["vmem_report"]
+    assert {r["family"] for r in report} >= {"fill_fused", "radix_sort"}
+
+
+def test_cli_invariants_and_concurrency(capsys):
+    assert analysis_main(["--invariants", "--concurrency"]) == 0
+    out = capsys.readouterr().out
+    assert "seeded corruptions rejected by name" in out
+    assert "concurrency lint: clean" in out

@@ -1,15 +1,12 @@
 """Core assembly: paper-exact intermediates + Matlab-semantics oracle."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import (
-    COO,
     assemble_arrays,
     assemble_fused,
     assembly_intermediates,
-    coo_from_matlab,
     fsparse,
 )
 from repro.core.oracle import (

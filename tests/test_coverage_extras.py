@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import assemble_arrays, fsparse, spmv, spmv_t
 from repro.core.oracle import dense_oracle
-from repro.kernels import blocked_cumsum, csc_to_ell
+from repro.kernels import blocked_cumsum
 from repro.kernels import spmv as spmv_kernel
 from repro.kernels.spmv.ref import spmv_ell_ref
 

@@ -7,7 +7,7 @@ import pytest
 pytestmark = pytest.mark.slow  # model-level: the suite's dominant cost
 
 from repro.configs import ARCHS, get_config
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig, SHAPES
+from repro.models.config import SHAPES
 from repro.models.model import (
     decode_step,
     forward,

@@ -142,8 +142,9 @@ def test_lru_env_capacity(monkeypatch):
         LRUCache(7, env="REPRO_PLAN_CACHE_SIZE")
 
 
-def test_lru_concurrent_no_lost_entries():
-    c = LRUCache(64)
+@pytest.mark.parametrize("sanitize", [False, True])
+def test_lru_concurrent_no_lost_entries(sanitize):
+    c = LRUCache(64, sanitize=sanitize)
     keys = [f"k{i}" for i in range(8)]
     barrier = threading.Barrier(8)
 
@@ -165,6 +166,42 @@ def test_lru_concurrent_no_lost_entries():
     assert info["insertions"] == len(keys)
     assert info["evictions"] == 0
     assert info["hits"] + info["misses"] == 8 * 200
+    if sanitize:
+        # clean stress run: lock tracking on, zero discipline findings
+        assert info["lock_sanitize"] is True
+        assert info["lock_reentries"] == 0
+    else:
+        assert "lock_sanitize" not in info   # default dict shape intact
+
+
+def test_lock_sanitizer_flags_factory_under_lock():
+    """Hold-across-plan detection: a get_or_create miss while the
+    calling thread holds the cache lock is the serialize-everything
+    bug; in sanitize mode it raises a named InvariantViolation at the
+    call site."""
+    from repro.sparse import InvariantViolation
+
+    c = LRUCache(4, name="sanitized", sanitize=True)
+    with pytest.raises(InvariantViolation, match="lock-discipline") as ei:
+        with c._locked():
+            c.get_or_create("k", lambda: 1)
+    assert ei.value.invariant == "lock-discipline"
+    # outside the lock the same call is fine, and re-entries were counted
+    assert c.get_or_create("k", lambda: 1) == 1
+    assert c.info()["lock_reentries"] == 1
+
+    # sanitize off (the default): no tracking, no false positives
+    c2 = LRUCache(4)
+    with c2._locked():
+        assert c2.get_or_create("k", lambda: 2) == 2
+    assert not c2.holds_lock()
+
+
+def test_env_lock_sanitize(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCK_SANITIZE", "1")
+    assert LRUCache(2).info()["lock_sanitize"] is True
+    monkeypatch.setenv("REPRO_LOCK_SANITIZE", "0")
+    assert "lock_sanitize" not in LRUCache(2).info()
 
 
 # ---------------------------------------------------------------------------

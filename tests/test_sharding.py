@@ -1,17 +1,15 @@
 """Sharding rules, input specs, and the HLO collective census parser."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.dryrun import collective_census, _bytes_of_shapes
-from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import (
     batch_spec,
     cache_specs,
-    param_specs,
     spec_for_param,
 )
 from repro.launch.specs import input_specs, train_batch_specs

@@ -23,7 +23,6 @@ from repro.sparse import (
     product_cache_clear,
     product_cache_info,
     product_plan,
-    cached_product_plan,
 )
 
 sp = pytest.importorskip("scipy.sparse")

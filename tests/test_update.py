@@ -346,46 +346,42 @@ def test_product_pattern_pytree_roundtrip_epoch_static():
 def test_pattern_jit_retraces_only_on_epoch_bump():
     """The serving contract behind the static epoch: same-structure
     value changes replay the compiled fill, an epoch bump retraces
-    exactly once."""
+    exactly once (checked through the reusable RetraceAuditor)."""
+    from repro.sparse.analysis import RetraceAuditor
+
     rows, cols = _stream(9, 9, 40, seed=22)
     pat = plan(rows, cols, (9, 9))
-    traces = []
-
-    @jax.jit
-    def fill(p, vals):
-        traces.append(1)
-        return p.scatter(vals)
+    auditor = RetraceAuditor()
+    fill = auditor.instrument(lambda p, vals: p.scatter(vals))
 
     v = jnp.ones(40, jnp.float32)
     r0 = fill(pat, v)
-    assert len(traces) == 1
+    auditor.expect(1, what="first fill")
     fill(pat, v * 2)                          # value change: no retrace
-    assert len(traces) == 1
+    auditor.expect(1, what="value-only change")
     bumped = dataclasses.replace(pat, epoch=pat.epoch + 1)
     r1 = fill(bumped, v)
-    assert len(traces) == 2                   # bump: exactly one retrace
+    auditor.expect(2, what="epoch bump")      # bump: exactly one retrace
     fill(bumped, v * 3)
-    assert len(traces) == 2
+    auditor.expect(2, what="post-bump value change")
     np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
 
 
 def test_product_pattern_jit_retraces_only_on_epoch_bump():
+    from repro.sparse.analysis import RetraceAuditor
+
     M = 11
     rows, cols = _stream(M, M, 70, seed=23)
     A = fsparse(rows + 1, cols + 1, np.ones(70, np.float32), (M, M))
     pp = product_plan(A, A)
-    traces = []
-
-    @jax.jit
-    def mul(p, da, db):
-        traces.append(1)
-        return p.multiply(da, db).data
+    auditor = RetraceAuditor()
+    mul = auditor.instrument(lambda p, da, db: p.multiply(da, db).data)
 
     mul(pp, A.data, A.data)
     mul(pp, A.data * 2, A.data)
-    assert len(traces) == 1
+    auditor.expect(1, what="value-only product refill")
     mul(dataclasses.replace(pp, epoch=1), A.data, A.data)
-    assert len(traces) == 2
+    auditor.expect(2, what="product epoch bump")
 
 
 def test_updated_operand_epoch_propagates_to_product():
