@@ -11,6 +11,15 @@ numeric fill — plus the unfused vs fused kernel fills, so the
 radix-vs-counting-sort comparison is reproducible from one command:
 
   python -m benchmarks.run --only parts [--scale 0.1] [--json out.json]
+
+A third section (set 1 only) emits a ``tuned-vs-prior`` row pair per
+kernel family through the autotuner's own measurement harness
+(:mod:`repro.sparse.tuning.measure`): ``parts_set1_prior_<family>``
+times the registry priors, ``parts_set1_tuned_<family>`` the resolved
+(possibly measured) policy, with the speedup as ``derived`` — so
+``run.py --compare`` gates that measured policies never regress the
+priors.  Without a measured table the two rows coincide (tuned ==
+prior) and the pair documents that fact.
 """
 from __future__ import annotations
 
@@ -104,6 +113,35 @@ def _methods(k, rows_z, cols_z, vals, M, N, L, out):
     ))
 
 
+def _tuned_vs_prior(scale, out):
+    """Per-family tuned-vs-prior pair through the tuner's measurers."""
+    from repro.sparse import tuning
+    from repro.sparse.tuning import measure
+
+    backend = jax.default_backend()
+    data = measure.make_dataset(scale=scale)
+    for fam in measure.MEASURABLE_FAMILIES:
+        prior = tuning.prior_policy(fam, backend)
+        tuned = tuning.resolve_policy(
+            fam, backend=backend,
+            M=data["M"], N=data["N"], L=data["L"],
+        )
+        t_prior = measure.time_policy(fam, prior, data)
+        t_tuned = (
+            t_prior if tuned == prior
+            else measure.time_policy(fam, tuned, data)
+        )
+        out.append(row(
+            f"parts_set1_prior_{fam}", t_prior,
+            policy="|".join(f"{k}:{v}" for k, v in sorted(prior.items())),
+        ))
+        out.append(row(
+            f"parts_set1_tuned_{fam}", t_tuned,
+            tuned=tuned != prior,
+            speedup=round(t_prior / max(t_tuned, 1e-9), 2),
+        ))
+
+
 def run(scale: float = 0.1):
     out = []
     for k in (1, 2, 3):
@@ -116,6 +154,7 @@ def run(scale: float = 0.1):
 
         _paper_parts(k, rows_z, cols_z, vals, M, N, L, out)
         _methods(k, rows_z, cols_z, vals, M, N, L, out)
+    _tuned_vs_prior(scale, out)
     return out
 
 

@@ -1,9 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-# ^ must precede any jax import (same contract as launch/dryrun.py).
+
+if __name__ == "__main__":
+    # CLI mode only: must precede any jax import (same contract as
+    # launch/dryrun.py).  Guarded so ``import benchmarks.roofline``
+    # (run.py's --roofline annotation path) stays side-effect free.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 """Roofline analysis from compiled dry-run artifacts.
 
@@ -40,6 +44,64 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 CHIPS = 256
+
+#: peak memory bandwidth per backend, GB/s.  TPU (v5e HBM) is a
+#: datasheet constant; CPU has no portable datasheet number, so the
+#: roof is measured once per process with a NumPy STREAM-triad sweep.
+BACKEND_PEAK_GBS = {"tpu": HBM_BW / 1e9}
+_MEASURED_PEAK_GBS: dict = {}
+
+
+def measure_stream_gbs(n: int = 1 << 24, reps: int = 3) -> float:
+    """Measured STREAM-triad bandwidth of the host, GB/s.
+
+    ``a = b + s * c`` over f64 vectors sized well past LLC: 3 streams
+    of 8 bytes per element per iteration.  Best of ``reps`` — the roof
+    is the *capability*, not the average.
+    """
+    import time as _time
+
+    import numpy as np
+
+    b = np.random.default_rng(0).random(n)
+    c = np.random.default_rng(1).random(n)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        a = b + 2.5 * c
+        dt = _time.perf_counter() - t0
+        best = min(best, dt)
+    del a
+    return 3 * 8 * n / best / 1e9
+
+
+def backend_peak_gbs(backend: str | None = None) -> float:
+    """The bandwidth roof for ``backend`` (measured lazily on CPU)."""
+    if backend is None:
+        backend = jax.default_backend()
+    if backend in BACKEND_PEAK_GBS:
+        return BACKEND_PEAK_GBS[backend]
+    if backend not in _MEASURED_PEAK_GBS:
+        _MEASURED_PEAK_GBS[backend] = measure_stream_gbs()
+    return _MEASURED_PEAK_GBS[backend]
+
+
+def annotate_roofline(rows, backend: str | None = None) -> int:
+    """Add achieved-vs-peak columns to kernel rows in place.
+
+    Every row dict carrying a ``bandwidth_gbs`` value gains
+    ``peak_gbs`` (the backend's bandwidth roof) and ``roofline_frac``
+    (achieved / peak).  Returns how many rows were annotated.
+    """
+    peak = backend_peak_gbs(backend)
+    annotated = 0
+    for r in rows:
+        if "bandwidth_gbs" not in r:
+            continue
+        r["peak_gbs"] = round(peak, 2)
+        r["roofline_frac"] = round(float(r["bandwidth_gbs"]) / peak, 4)
+        annotated += 1
+    return annotated
 
 
 def probe_cell(arch: str, shape_name: str, *, mesh_kind: str = "single"):

@@ -2,6 +2,8 @@
 
   python -m benchmarks.run [--scale 0.1] [--only parts] [--json out.json]
   python -m benchmarks.run --compare BENCH_pr4.json   # regression gate
+  python -m benchmarks.run --roofline                 # achieved vs peak
+                                                      # bandwidth columns
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
 writes every row as a machine-readable record (plus environment
@@ -52,7 +54,8 @@ import time
 #: the hot plan/fill paths whose regressions the snapshots exist to
 #: catch.  Oracle/model rows are reported but not gated.
 GATED_ROW_RE = re.compile(
-    r"(_method_|_fill_|_reuse$|_grad$|_post$|_update$|_replan$|_spmv_)"
+    r"(_method_|_fill_|_reuse$|_grad$|_post$|_update$|_replan$|_spmv_"
+    r"|_tuned_|_prior_)"
 )
 
 #: smallest baseline timing a ratio is meaningful against.  Rows are
@@ -146,6 +149,10 @@ def main() -> None:
     ap.add_argument("--compare-tolerance", type=float, default=0.10,
                     help="allowed slowdown fraction before the gate "
                          "fails (0.10 = ±10%%)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="annotate kernel rows carrying bandwidth_gbs "
+                         "with the backend's peak bandwidth and the "
+                         "achieved fraction (ROADMAP item 3)")
     args = ap.parse_args()
 
     from . import (
@@ -191,6 +198,27 @@ def main() -> None:
             failed.append((name, e))
             print(f"{name},-1,error={type(e).__name__}:{e}", file=sys.stderr)
         results[name] = common.RESULTS[start:]
+
+    if args.roofline:
+        from . import roofline
+
+        peak = roofline.backend_peak_gbs()
+        n = sum(
+            roofline.annotate_roofline(rows) for rows in results.values()
+        )
+        print(
+            f"roofline: peak {peak:.1f} GB/s, {n} kernel rows annotated",
+            file=sys.stderr,
+        )
+        for rows in results.values():
+            for r in rows:
+                if "roofline_frac" in r:
+                    print(
+                        f"roofline: {r['name']} "
+                        f"{r['bandwidth_gbs']:.2f}/{r['peak_gbs']:.1f} "
+                        f"GB/s = {r['roofline_frac'] * 100:.1f}% of peak",
+                        file=sys.stderr,
+                    )
 
     if args.json:
         import jax

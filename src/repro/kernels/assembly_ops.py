@@ -58,7 +58,7 @@ def plan_pallas(
     M: int,
     N: int,
     nzmax: int | None = None,
-    block_b: int = 4096,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> SparsePattern:
     """Symbolic phase with the radix-partition planner kernels.
@@ -88,7 +88,7 @@ def fill_fused(
     vals: jax.Array,
     *,
     accum: str | None = None,
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> CSC:
     """Fused numeric phase: gather + mask + segment reduce in one kernel.
@@ -121,7 +121,7 @@ def multiply_fused(
     data_A: jax.Array,
     data_B: jax.Array,
     *,
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> CSC:
     """Fused SpGEMM numeric phase: gathers + multiply + reduce in one
@@ -258,7 +258,7 @@ def assemble_pallas(
     M: int,
     N: int,
     nzmax: int | None = None,
-    block_b: int = 4096,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> CSC:
     """Padded-CSC assembly with all size-L passes in Pallas kernels."""

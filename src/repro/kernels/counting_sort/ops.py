@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...sparse import tuning
 from ..hist.ops import block_offsets
 from .counting_sort import placement
 
@@ -17,8 +18,8 @@ def counting_sort(
     keys: jax.Array,
     *,
     nbins: int,
-    block_b: int = 1024,
-    block_t: int = 512,
+    block_b: int | None = None,
+    block_t: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stable distribution counting sort of bounded int keys.
@@ -26,8 +27,15 @@ def counting_sort(
     Returns ``(rank, positions)``: ``keys[rank]`` is sorted stably and
     ``rank[positions[i]] == i``.  This is the paper's Part 1 + Part 2
     pipeline: private per-block histograms -> hierarchical accumulation
-    -> placement -> one collision-free scatter.
+    -> placement -> one collision-free scatter.  ``block_b``/``block_t``
+    default to the resolved ``counting_sort`` tuning policy.
     """
+    if block_b is None or block_t is None:
+        pol = tuning.resolve_policy(
+            "counting_sort", N=nbins, L=keys.shape[0]
+        )
+        block_b = int(pol["block_b"]) if block_b is None else block_b
+        block_t = int(pol["block_t"]) if block_t is None else block_t
     offsets, _jr = block_offsets(
         keys, nbins=nbins, block_b=block_b, interpret=interpret
     )

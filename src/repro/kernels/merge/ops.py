@@ -17,12 +17,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...sparse import tuning
 from .merge import merge_search_pallas
 from .ref import merge_search_ref
 
-#: resident target-key budget (both int32 key vectors together), the
-#: same half-VMEM convention as ``assembly_ops.FUSED_RESIDENT_MAX_BYTES``.
-MERGE_RESIDENT_MAX_BYTES = 8 * 1024 * 1024
+#: deprecated alias of the single registry-owned residency budget
+#: (:data:`repro.sparse.tuning.RESIDENT_BUDGET_BYTES`) — the former
+#: duplicated copy of ``FUSED_RESIDENT_MAX_BYTES`` is now the same
+#: value by construction.  Kept as a name for back-compat; a rebound
+#: value overrides the resolved policy (see :func:`_policy`).
+MERGE_RESIDENT_MAX_BYTES = tuning.RESIDENT_BUDGET_BYTES
+
+
+def _policy(n_targets: int) -> dict:
+    """Trace-time execution policy of one merge search.
+
+    The deprecated :data:`MERGE_RESIDENT_MAX_BYTES` module constant,
+    when rebound away from the registry value, overrides the resolved
+    budget (same contract as the fused fills' alias).
+    """
+    pol = tuning.resolve_policy("merge", L=n_targets)
+    if MERGE_RESIDENT_MAX_BYTES != tuning.RESIDENT_BUDGET_BYTES:
+        pol = dict(pol, resident_max_bytes=MERGE_RESIDENT_MAX_BYTES)
+    return pol
 
 
 def merge_vmem_spec(n_targets: int) -> dict:
@@ -33,12 +50,13 @@ def merge_vmem_spec(n_targets: int) -> dict:
     element.  Consumed by :mod:`repro.sparse.analysis.vmem`.
     """
     resident = 2 * int(n_targets) * 4
-    fits = resident <= MERGE_RESIDENT_MAX_BYTES
+    budget = int(_policy(int(n_targets))["resident_max_bytes"])
+    fits = resident <= budget
     return {
         "family": "merge_search",
         "params": {"n_targets": int(n_targets)},
         "resident_bytes": resident,
-        "budget_bytes": MERGE_RESIDENT_MAX_BYTES,
+        "budget_bytes": budget,
         "fits": fits,
         "path": "pallas-merge" if fits else "xla-searchsorted",
     }
@@ -54,7 +72,7 @@ def merge_search(
     t_cols: jax.Array,
     *,
     side: str = "left",
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Per-query insertion offsets into a sorted target stream.
@@ -62,12 +80,16 @@ def merge_search(
     Same contract as :func:`repro.kernels.merge.ref.merge_search_ref`
     (which it matches bit-for-bit); dispatches to the Pallas kernel
     when the target keys fit the VMEM residency budget.
+    ``block_b=None`` resolves the query tile from the tuning policy.
     """
     n = int(t_rows.shape[0])
     Lq = int(q_rows.shape[0])
     if n == 0 or Lq == 0:
         return jnp.zeros((Lq,), jnp.int32)
-    if 2 * n * 4 > MERGE_RESIDENT_MAX_BYTES:
+    pol = _policy(n)
+    if block_b is None:
+        block_b = int(pol["block_b"])
+    if 2 * n * 4 > int(pol["resident_max_bytes"]):
         return merge_search_ref(q_rows, q_cols, t_rows, t_cols, side=side)
     return merge_search_pallas(
         q_rows, q_cols, t_rows, t_cols,

@@ -32,6 +32,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ...sparse import tuning
 from ..common import LANES, round_up
 from .radix_sort import digit_block_histogram, digit_placement
 
@@ -45,25 +46,37 @@ class DigitPass(NamedTuple):
     nbins: int      # exact bin count (<= 2**bits)
 
 
-#: cost-model constants, in arbitrary "per-element operation" units —
-#: calibrated against bench_parts on the Table 4.2 sets, not measured
-#: per machine.  Only their ratios matter.
-_PASS_COST = 192        # per element, independent of the digit width
-_TILE_COST = 3          # per element per padded bin lane
-_LAUNCH_COST = 50_000   # per pass, amortized over the L elements
-#: VMEM bound on a single digit: 2^11 bins = sixteen 128-lane tiles.
-_MAX_BITS = 11
+def _cost_model(M: int, N: int, L: int) -> dict:
+    """Resolved cost-model priors for one planning invocation.
+
+    The constants live in the ``radix_sort`` tuning spec, in arbitrary
+    "per-element operation" units (only their ratios matter):
+    ``pass_cost`` per element independent of digit width, ``tile_cost``
+    per element per padded bin lane, ``launch_cost`` per pass amortized
+    over the L elements, and ``max_bits`` — the VMEM bound on a single
+    digit (2^11 bins = sixteen 128-lane tiles).  The autotuner
+    calibrates them per (backend, shape); untuned they equal the former
+    compile-time constants.
+    """
+    pol = tuning.resolve_policy("radix_sort", M=M, N=N, L=L)
+    return {
+        "pass_cost": float(pol["pass_cost"]),
+        "tile_cost": float(pol["tile_cost"]),
+        "launch_cost": float(pol["launch_cost"]),
+        "max_bits": int(pol["max_bits"]),
+    }
 
 
-def _word_cost(npass: int, width: int, L: int) -> float:
+def _word_cost(npass: int, width: int, L: int, costs: dict) -> float:
     tile = round_up(1 << width, LANES)
     return npass * (
-        _PASS_COST + _TILE_COST * tile + _LAUNCH_COST / max(L, 1)
+        costs["pass_cost"] + costs["tile_cost"] * tile
+        + costs["launch_cost"] / max(L, 1)
     )
 
 
-def _word_passes(vmax: int, L: int, max_bits: int,
-                 src_col: bool) -> list[DigitPass]:
+def _word_passes(vmax: int, L: int, max_bits: int, src_col: bool,
+                 costs: dict) -> list[DigitPass]:
     """Cost-optimal equal-width LSD digit split of one index word with
     values ``0..vmax`` (inclusive — ``vmax`` is the rows' padding
     sentinel)."""
@@ -71,7 +84,7 @@ def _word_passes(vmax: int, L: int, max_bits: int,
     # npass = bits_total (width 1) always satisfies any max_bits >= 1,
     # so the candidate set is never empty
     _, width = min(
-        (_word_cost(npass, -(-bits_total // npass), L),
+        (_word_cost(npass, -(-bits_total // npass), L, costs),
          -(-bits_total // npass))
         for npass in range(1, bits_total + 1)
         if -(-bits_total // npass) <= max_bits
@@ -95,16 +108,18 @@ def plan_digit_passes(
     Rows span ``0..M`` (``M`` is the padding sentinel) and cols are
     sized for ``0..N`` defensively; both stay int32 per word, so there
     is no combined-key overflow regime at any matrix size.  ``max_bits``
-    caps the digit width (default: 11 — the VMEM bound); the width
-    actually used comes from the cost model above.
+    caps the digit width (default: the resolved tuning policy's bound,
+    11 untuned); the width actually used comes from the cost model
+    (:func:`_cost_model` — overridable priors the autotuner calibrates).
     """
+    costs = _cost_model(M, N, L)
     if max_bits is None:
-        max_bits = _MAX_BITS
+        max_bits = costs["max_bits"]
     if max_bits < 1:
         raise ValueError(f"max_bits must be >= 1, got {max_bits}")
     return tuple(
-        _word_passes(M, L, max_bits, src_col=False)
-        + _word_passes(N, L, max_bits, src_col=True)
+        _word_passes(M, L, max_bits, False, costs)
+        + _word_passes(N, L, max_bits, True, costs)
     )
 
 
@@ -113,13 +128,16 @@ def radix_vmem_spec(M: int, N: int, L: int, *,
     """Static VMEM profile of the planned radix pass schedule.
 
     The radix planner never falls back: :func:`plan_digit_passes` caps
-    every digit at ``max_bits`` (default :data:`_MAX_BITS`) by
-    construction, so the widest padded one-hot bin tile is bounded at
-    plan time.  This spec reports that bound — the largest padded tile
-    in int32 bytes against the planner's own ``2^max_bits`` ceiling —
-    plus the pass count, for the analysis layer's table.
+    every digit at ``max_bits`` (default: the resolved policy's bound)
+    by construction, so the widest padded one-hot bin tile is bounded
+    at plan time.  This spec reports that bound — the largest padded
+    tile in int32 bytes against the planner's own ``2^max_bits``
+    ceiling — plus the pass count, for the analysis layer's table.
     """
-    bits_cap = _MAX_BITS if max_bits is None else int(max_bits)
+    if max_bits is None:
+        bits_cap = _cost_model(M, N, L)["max_bits"]
+    else:
+        bits_cap = int(max_bits)
     passes = plan_digit_passes(M, N, L, max_bits=max_bits)
     tile = max(round_up(1 << p.bits, LANES) for p in passes)
     resident = tile * 4
@@ -141,8 +159,8 @@ def radix_pass_positions(
     shift: int,
     bits: int,
     nbins: int,
-    block_b: int = 1024,
-    block_t: int = 512,
+    block_b: int | None = None,
+    block_t: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Landing positions of a stable sort of one digit.
@@ -152,7 +170,12 @@ def radix_pass_positions(
     exclusive scan -> placement, no rank materialized.  One scatter of
     any payload through ``pos`` applies the pass (used by
     :func:`radix_sort_pair` to move the permutation directly).
+    ``block_b``/``block_t`` default to the counting-sort tile policy.
     """
+    if block_b is None or block_t is None:
+        pol = tuning.resolve_policy("counting_sort", L=keys.shape[0])
+        block_b = int(pol["block_b"]) if block_b is None else block_b
+        block_t = int(pol["block_t"]) if block_t is None else block_t
     per_block = digit_block_histogram(
         keys, shift=shift, bits=bits, nbins=nbins, block_b=block_b,
         block_t=block_t, interpret=interpret,
@@ -180,8 +203,8 @@ def radix_pass_rank(
     shift: int,
     bits: int,
     nbins: int,
-    block_b: int = 1024,
-    block_t: int = 512,
+    block_b: int | None = None,
+    block_t: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Stable sort permutation of one digit: ``keys[rank]`` is ordered
@@ -210,8 +233,8 @@ def radix_sort_pair(
     *,
     M: int,
     N: int,
-    block_b: int = 4096,
-    block_t: int = 512,
+    block_b: int | None = None,
+    block_t: int | None = None,
     max_bits: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -229,6 +252,10 @@ def radix_sort_pair(
     reads the keys directly.
     """
     L = rows.shape[0]
+    if block_b is None or block_t is None:
+        pol = tuning.resolve_policy("radix_sort", M=M, N=N, L=L)
+        block_b = int(pol["block_b"]) if block_b is None else block_b
+        block_t = int(pol["block_t"]) if block_t is None else block_t
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     perm = None  # identity until the first pass lands

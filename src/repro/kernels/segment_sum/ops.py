@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...sparse import tuning
 from ...sparse.pattern import (
     _slot_counts,
     accum_dtype,  # re-exported: the shared 16-bit->f32 accumulator rule
@@ -59,6 +60,31 @@ def _segment_totals(c: jax.Array, first: jax.Array, *,
     return hi - lo
 
 
+#: deprecated alias of the single registry-owned residency budget
+#: (:data:`repro.sparse.tuning.RESIDENT_BUDGET_BYTES`): 8 MB of
+#: resident value buffers (2^21 f32 / 2^20 f64 elements), leaving room
+#: for the 64k-wide index and output blocks on a 16 MB core.  Larger
+#: streams take the unfused (blocked) reduce instead of failing to
+#: fit.  Kept as a name because callers/tests rebind it; a rebound
+#: value overrides the resolved policy (see :func:`_policy`).
+FUSED_RESIDENT_MAX_BYTES = tuning.RESIDENT_BUDGET_BYTES
+
+
+def _policy(L: int, dtype) -> dict:
+    """Trace-time execution policy of one segment-reduce invocation.
+
+    Tile sizes and the residency budget come from the tuning registry
+    (:func:`repro.sparse.tuning.resolve_policy`); the deprecated
+    :data:`FUSED_RESIDENT_MAX_BYTES` module constant, when rebound away
+    from the registry value (tests monkeypatch it to force the
+    fallback), overrides the resolved budget.
+    """
+    pol = tuning.resolve_policy("segment_sum", L=L, dtype=dtype)
+    if FUSED_RESIDENT_MAX_BYTES != tuning.RESIDENT_BUDGET_BYTES:
+        pol = dict(pol, resident_max_bytes=FUSED_RESIDENT_MAX_BYTES)
+    return pol
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_segments", "block_b", "interpret")
 )
@@ -67,28 +93,26 @@ def segment_sum_sorted(
     first: jax.Array,
     *,
     num_segments: int,
-    block_b: int = 4096,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Per-segment totals of a stream whose duplicates are adjacent.
 
     This is the access-complexity win the paper's Table 3.1 documents
     for the permuted-intermediate design: the reduce is one contiguous
-    cumsum plus two size-``num_segments`` gathers.
+    cumsum plus two size-``num_segments`` gathers.  ``block_b=None``
+    resolves the scan tile from the tuning policy (``scan_block_b``).
     """
     if vals.shape[0] == 0:
         # empty stream (Matlab empty-matrix fill): nothing to scan, and
         # the segment-boundary gathers of _segment_totals assume L >= 1
         return jnp.zeros((num_segments,), vals.dtype)
+    if block_b is None:
+        block_b = int(
+            _policy(vals.shape[0], vals.dtype)["scan_block_b"]
+        )
     c = blocked_cumsum(vals, block_b=block_b, interpret=interpret)
     return _segment_totals(c, first, num_segments=num_segments)
-
-
-#: largest value buffer the fused kernel keeps VMEM-resident: 8 MB
-#: (2^21 f32 / 2^20 f64 elements), leaving room for the 64k-wide index
-#: and output blocks on a 16 MB core.  Larger streams take the unfused
-#: (blocked) reduce below instead of failing to fit.
-FUSED_RESIDENT_MAX_BYTES = 8 << 20
 
 
 @functools.partial(
@@ -100,7 +124,7 @@ def gather_segment_sum_sorted(
     slot: jax.Array,
     *,
     num_segments: int,
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused numeric phase: segment totals of ``vals[perm]`` masked by
@@ -122,14 +146,18 @@ def gather_segment_sum_sorted(
         return jnp.zeros((num_segments,), dtype)
     vals = vals.astype(accum_dtype(dtype))
     first = first_flags(slot, num_segments)
+    pol = _policy(perm.shape[0], dtype)
+    if block_b is None:
+        block_b = int(pol["block_b"])
     resident = max(perm.shape[0], vals.shape[0]) * vals.dtype.itemsize
-    if resident > FUSED_RESIDENT_MAX_BYTES:
+    if resident > int(pol["resident_max_bytes"]):
         # stream too long to keep vals VMEM-resident: materialize the
         # gathered stream once and run the blocked carry-scan reduce
         v_s = jnp.where(
             slot < num_segments, vals[perm], jnp.zeros((), vals.dtype)
         )
-        c = blocked_cumsum(v_s, interpret=interpret)
+        c = blocked_cumsum(v_s, block_b=int(pol["scan_block_b"]),
+                           interpret=interpret)
     else:
         c = gather_masked_cumsum(
             vals, perm, slot, num_segments=num_segments, block_b=block_b,
@@ -150,7 +178,7 @@ def gather2_segment_sum_sorted(
     slot: jax.Array,
     *,
     num_segments: int,
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused SpGEMM numeric phase: segment totals of the expansion
@@ -173,12 +201,16 @@ def gather2_segment_sum_sorted(
     va = vals_a.astype(acc)
     vb = vals_b.astype(acc)
     first = first_flags(slot, num_segments)
+    pol = _policy(sa.shape[0], dtype)
+    if block_b is None:
+        block_b = int(pol["block_b"])
     resident = (va.shape[0] + vb.shape[0]) * va.dtype.itemsize
-    if resident > FUSED_RESIDENT_MAX_BYTES:
+    if resident > int(pol["resident_max_bytes"]):
         v_s = jnp.where(
             slot < num_segments, va[sa] * vb[sb], jnp.zeros((), acc)
         )
-        c = blocked_cumsum(v_s, interpret=interpret)
+        c = blocked_cumsum(v_s, block_b=int(pol["scan_block_b"]),
+                           interpret=interpret)
     else:
         c = gather2_masked_cumsum(
             va, vb, sa, sb, slot, num_segments=num_segments,
@@ -200,12 +232,13 @@ def fill_vmem_spec(L: int, dtype=jnp.float32) -> dict:
     """
     acc = jnp.dtype(accum_dtype(fill_dtype(jnp.dtype(dtype))))
     resident = int(L) * acc.itemsize
-    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    budget = int(_policy(int(L), dtype)["resident_max_bytes"])
+    fits = resident <= budget
     return {
         "family": "fill_fused",
         "params": {"L": int(L), "dtype": jnp.dtype(dtype).name},
         "resident_bytes": resident,
-        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "budget_bytes": budget,
         "fits": fits,
         "path": "pallas-fused" if fits else "xla-blocked-cumsum",
     }
@@ -221,14 +254,18 @@ def spgemm_vmem_spec(a_capacity: int, b_capacity: int,
     """
     acc = jnp.dtype(accum_dtype(fill_dtype(jnp.dtype(dtype))))
     resident = (int(a_capacity) + int(b_capacity)) * acc.itemsize
-    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    budget = int(
+        _policy(int(a_capacity) + int(b_capacity), dtype)
+        ["resident_max_bytes"]
+    )
+    fits = resident <= budget
     return {
         "family": "spgemm_fused",
         "params": {"a_capacity": int(a_capacity),
                    "b_capacity": int(b_capacity),
                    "dtype": jnp.dtype(dtype).name},
         "resident_bytes": resident,
-        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "budget_bytes": budget,
         "fits": fits,
         "path": "pallas-fused" if fits else "xla-blocked-cumsum",
     }
@@ -255,7 +292,7 @@ def gather_segment_reduce_sorted(
     *,
     accum: str = "sum",
     num_segments: int,
-    block_b: int = 65536,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Masked sorted-segment reduction under any ``accum`` mode.
@@ -307,8 +344,11 @@ def gather_segment_reduce_sorted(
     vals = vals.astype(dtype)
     first = first_flags(slot, num_segments)
     ident = accum_identity(accum, dtype)
+    pol = _policy(perm.shape[0], dtype)
+    if block_b is None:
+        block_b = int(pol["block_b"])
     resident = max(perm.shape[0], vals.shape[0]) * vals.dtype.itemsize
-    if resident > FUSED_RESIDENT_MAX_BYTES:
+    if resident > int(pol["resident_max_bytes"]):
         v_s = jnp.where(slot < num_segments, vals[perm], ident)
         seg_ids = jnp.cumsum(first.astype(jnp.int32)) - 1
         seg_ids = jnp.clip(seg_ids, 0, num_segments - 1)

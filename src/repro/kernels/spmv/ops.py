@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.csc import CSC, slot_columns
+from ...sparse import tuning
 from .spmv import spmv_ell
 
 
@@ -49,5 +50,16 @@ def csc_to_ell(A: CSC, *, max_per_row: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
-def spmv(cols, vals, x, *, block_r: int = 256, interpret: bool | None = None):
+def spmv(
+    cols, vals, x, *, block_r: int | None = None,
+    interpret: bool | None = None,
+):
+    """Padded-ELL SpMV; ``block_r=None`` resolves the row tile from the
+    tuning policy."""
+    if block_r is None:
+        pol = tuning.resolve_policy(
+            "spmv", M=cols.shape[0], N=x.shape[0],
+            L=cols.shape[0] * cols.shape[1], dtype=vals.dtype,
+        )
+        block_r = int(pol["block_r"])
     return spmv_ell(cols, vals, x, block_r=block_r, interpret=interpret)

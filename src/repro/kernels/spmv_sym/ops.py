@@ -15,14 +15,28 @@ import jax
 import jax.numpy as jnp
 
 from ...core.csc import slot_columns
+from ...sparse import tuning
 from ..common import INTERPRET
-from ..segment_sum.ops import FUSED_RESIDENT_MAX_BYTES  # shared cap
 from .ref import spmv_bsr_ref, spmv_sym_ref
 from .spmv_sym import bsr_tiles, sym_streams
 
+#: deprecated alias of the registry-owned residency budget — this
+#: family used to import the cap from ``segment_sum.ops``; a rebound
+#: value overrides the resolved policy (see :func:`_budget`).
+FUSED_RESIDENT_MAX_BYTES = tuning.RESIDENT_BUDGET_BYTES
 
-def _use_kernel(resident_bytes: int, interpret: bool | None) -> bool:
-    if resident_bytes > FUSED_RESIDENT_MAX_BYTES:
+
+def _budget(M: int, dtype) -> int:
+    """Resolved residency budget of one symmetric/blocked SpMV call."""
+    pol = tuning.resolve_policy("spmv_sym", M=M, dtype=dtype)
+    if FUSED_RESIDENT_MAX_BYTES != tuning.RESIDENT_BUDGET_BYTES:
+        return int(FUSED_RESIDENT_MAX_BYTES)
+    return int(pol["resident_max_bytes"])
+
+
+def _use_kernel(resident_bytes: int, budget: int,
+                interpret: bool | None) -> bool:
+    if resident_bytes > budget:
         return False
     if interpret is None:
         return not INTERPRET          # compiled kernel only on real TPU
@@ -38,12 +52,13 @@ def sym_vmem_spec(M: int, dtype=jnp.float32) -> dict:
     the budget; ``path`` reports the budget decision alone.
     """
     resident = int(M) * jnp.dtype(dtype).itemsize
-    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    budget = _budget(int(M), dtype)
+    fits = resident <= budget
     return {
         "family": "spmv_sym",
         "params": {"M": int(M), "dtype": jnp.dtype(dtype).name},
         "resident_bytes": resident,
-        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "budget_bytes": budget,
         "fits": fits,
         "path": "pallas-sym-streams" if fits else "xla-ref",
     }
@@ -57,20 +72,21 @@ def bsr_vmem_spec(N: int, block: int, dtype=jnp.float32) -> dict:
     """
     b = int(block)
     resident = (int(N) // b) * b * jnp.dtype(dtype).itemsize if b else 0
-    fits = resident <= FUSED_RESIDENT_MAX_BYTES
+    budget = _budget(int(N), dtype)
+    fits = resident <= budget
     return {
         "family": "spmv_bsr",
         "params": {"N": int(N), "block": b,
                    "dtype": jnp.dtype(dtype).name},
         "resident_bytes": resident,
-        "budget_bytes": FUSED_RESIDENT_MAX_BYTES,
+        "budget_bytes": budget,
         "fits": fits,
         "path": "pallas-bsr-tiles" if fits else "xla-ref",
     }
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def spmv_sym(diag, data, indices, indptr, x, *, block_b: int = 65536,
+def spmv_sym(diag, data, indices, indptr, x, *, block_b: int | None = None,
              interpret: bool | None = None) -> jax.Array:
     """Fused both-triangles symmetric SpMV over strict-upper storage.
 
@@ -81,7 +97,12 @@ def spmv_sym(diag, data, indices, indptr, x, *, block_b: int = 65536,
     """
     M = diag.shape[0]
     nzmax = data.shape[-1]
-    if M == 0 or nzmax == 0 or not _use_kernel(x.nbytes, interpret):
+    pol = tuning.resolve_policy("spmv_sym", M=M, L=nzmax, dtype=x.dtype)
+    if block_b is None:
+        block_b = int(pol["block_b"])
+    budget = _budget(M, x.dtype)
+    if M == 0 or nzmax == 0 or not _use_kernel(x.nbytes, budget,
+                                               interpret):
         return spmv_sym_ref(diag, data, indices, indptr, x)
     cols = jnp.clip(slot_columns(indptr, nzmax), 0, M - 1)
     up, cs = sym_streams(indices, cols, data, x, M=M, block_b=block_b,
@@ -95,14 +116,18 @@ def spmv_sym(diag, data, indices, indptr, x, *, block_b: int = 65536,
 @functools.partial(jax.jit,
                    static_argnames=("shape", "block", "block_t", "interpret"))
 def spmv_bsr(data, indices, indptr, x, *, shape, block: int,
-             block_t: int = 4096, interpret: bool | None = None) -> jax.Array:
+             block_t: int | None = None,
+             interpret: bool | None = None) -> jax.Array:
     """Blocked SpMV: dense ``b x b`` register tiles over block-CSC."""
     M, N = shape
     b = int(block)
     nbmax = data.shape[0]
+    pol = tuning.resolve_policy("spmv_sym", M=M, N=N, dtype=x.dtype)
+    if block_t is None:
+        block_t = int(pol["block_t"])
     resident = (N // b) * b * x.dtype.itemsize if b else 0
     if M == 0 or nbmax == 0 or b == 0 \
-            or not _use_kernel(resident, interpret):
+            or not _use_kernel(resident, _budget(N, x.dtype), interpret):
         return spmv_bsr_ref(data, indices, indptr, x, shape=shape,
                             block=block)
     Mb, Nb = M // b, N // b

@@ -123,6 +123,17 @@ from .sharded import (
     plan_sharded_coo,
 )
 from .analysis import validate_matrix, validate_pattern
+from .tuning import (
+    KernelSpec,
+    Knob,
+    TuningTable,
+    kernel_spec,
+    prior_policy,
+    register_kernel_spec,
+    registered_families,
+    resolve_policy,
+    tuning_fingerprint,
+)
 
 
 def assemble(coo: COO, *, nzmax: int | None = None,
@@ -141,6 +152,8 @@ __all__ = [
     "CapacityWarning",
     "FallbackWarning",
     "InvariantViolation",
+    "KernelSpec",
+    "Knob",
     "LRUCache",
     "PlanService",
     "PlanUpdate",
@@ -152,6 +165,7 @@ __all__ = [
     "SparsePattern",
     "SymCSC",
     "SymPattern",
+    "TuningTable",
     "apply_runtime_env",
     "assemble",
     "cached_product_plan",
@@ -166,6 +180,7 @@ __all__ = [
     "format_of",
     "fsparse",
     "fsparse_coo",
+    "kernel_spec",
     "load_caches",
     "method_from_fused",
     "mtimes",
@@ -183,14 +198,18 @@ __all__ = [
     "plan_sharded_coo",
     "plan_symmetric",
     "plan_update",
+    "prior_policy",
     "product_cache_clear",
     "product_cache_info",
     "product_lookup",
     "product_plan",
     "register_converter",
     "register_format",
+    "register_kernel_spec",
     "register_method",
+    "registered_families",
     "resolve_method",
+    "resolve_policy",
     "retire_structure",
     "runtime_env",
     "save_caches",
@@ -201,6 +220,7 @@ __all__ = [
     "spmv_t",
     "tcmalloc_hint",
     "trivial_pattern",
+    "tuning_fingerprint",
     "validate_matrix",
     "validate_pattern",
 ]

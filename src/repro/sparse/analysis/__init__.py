@@ -14,6 +14,10 @@ Four layers, one CLI (``python -m repro.sparse.analysis``):
   (per kernel family ``*_vmem_spec`` against the shared 8 MB cap).
 * :mod:`.concurrency` — AST lint over the serving stack's shared
   module-level caches: every mutation under a lock or LRUCache method.
+* :mod:`.tuning_check` — tuning-table validator (entries vs. registered
+  kernel specs) + AST lint flagging hardcoded tile/budget constants in
+  the dispatch/ops layer outside the :mod:`repro.sparse.tuning`
+  registry.
 """
 
 from __future__ import annotations
@@ -33,6 +37,11 @@ from .invariants import (
     validation_enabled,
     validator_for_format,
 )
+from .tuning_check import (
+    format_tuning_findings,
+    lint_tuning_constants,
+    validate_tuning_table,
+)
 from .vmem import format_table, vmem_report
 
 __all__ = [
@@ -43,10 +52,13 @@ __all__ = [
     "audit_retraces",
     "format_findings",
     "format_table",
+    "format_tuning_findings",
     "lint_shared_state",
+    "lint_tuning_constants",
     "maybe_validate_pattern",
     "validate_matrix",
     "validate_pattern",
+    "validate_tuning_table",
     "validation_enabled",
     "validator_for_format",
     "vmem_report",

@@ -11,6 +11,8 @@ contract, so CI can gate on it:
 * ``--vmem``         print the static VMEM residency table
   (``--json PATH`` also writes it as the autotuner artifact).
 * ``--concurrency``  AST lint of shared-cache mutations.
+* ``--tuning``       tuning-table validation + lint against hardcoded
+  tile/budget constants outside the tuning registry.
 * ``--all``          everything above (the default with no flags).
 """
 
@@ -82,6 +84,27 @@ def _check_invariants() -> list[str]:
     return failures
 
 
+def _check_tuning() -> list[str]:
+    """Table entries match the registry; no re-scattered constants."""
+    from .tuning_check import (
+        format_tuning_findings,
+        lint_tuning_constants,
+        validate_tuning_table,
+    )
+
+    failures: list[str] = []
+    try:
+        checked = validate_tuning_table()
+    except InvariantViolation as e:
+        failures.append(str(e))
+    else:
+        print(f"tuning table: {checked} measured entries valid")
+    findings = lint_tuning_constants()
+    print(format_tuning_findings(findings))
+    failures += [f["reason"] for f in findings]
+    return failures
+
+
 def _check_jaxpr() -> list[str]:
     from .contracts import audit_default_paths, audit_retraces
 
@@ -111,6 +134,7 @@ def main(argv=None) -> int:
     parser.add_argument("--jaxpr", action="store_true")
     parser.add_argument("--vmem", action="store_true")
     parser.add_argument("--concurrency", action="store_true")
+    parser.add_argument("--tuning", action="store_true")
     parser.add_argument(
         "--json",
         metavar="PATH",
@@ -119,6 +143,7 @@ def main(argv=None) -> int:
     args = parser.parse_args(argv)
     none_picked = not (
         args.invariants or args.jaxpr or args.vmem or args.concurrency
+        or args.tuning
     )
     run_all = args.all or none_picked
 
@@ -147,6 +172,8 @@ def main(argv=None) -> int:
         findings = lint_shared_state()
         print(format_findings(findings))
         failures += [f["reason"] for f in findings]
+    if run_all or args.tuning:
+        failures += _check_tuning()
 
     if failures:
         for f in failures:

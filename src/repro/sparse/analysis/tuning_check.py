@@ -1,0 +1,220 @@
+"""Tuning-table validator + AST lint against re-scattered constants.
+
+Two checks keep the execution-policy layer the *single* home of kernel
+knobs:
+
+* :func:`validate_tuning_table` — every entry of a
+  :class:`~repro.sparse.tuning.TuningTable` must name a registered
+  kernel family, only knobs that family's :class:`KernelSpec` declares,
+  and values type-compatible with the knob's prior.  A measured table
+  that drifted from the registry (schema change, hand-edited JSON)
+  raises :class:`~repro.sparse.errors.InvariantViolation` with a stable
+  invariant name instead of silently mis-steering dispatch.
+* :func:`lint_tuning_constants` — AST lint over the dispatch/ops layer
+  (the files that *consume* resolved policies) flagging any return of
+  the pre-registry idiom: a module-level numeric constant whose name
+  says it is a residency cap / cost-model weight, or a tile-size
+  keyword (``block_b``/``block_t``/``block_r``/``max_bits``) whose
+  default is a numeric literal instead of ``None`` (= "resolve through
+  the tuning table").  Deprecated aliases like
+  ``MERGE_RESIDENT_MAX_BYTES = tuning.RESIDENT_BUDGET_BYTES`` are
+  clean: the value is a name reference into the registry, not a
+  literal, so the two can never diverge again.
+
+The raw Pallas kernels underneath (``merge/merge.py`` etc.) are out of
+scope on purpose — their knob arguments are always passed explicitly by
+the ops layer, which is where policy is resolved.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from ..errors import InvariantViolation
+
+__all__ = [
+    "format_tuning_findings",
+    "lint_tuning_constants",
+    "validate_tuning_table",
+]
+
+#: policy-consuming modules the lint guards (relative to ``src/repro``).
+DEFAULT_TUNING_LINT_PATHS = (
+    "kernels/assembly_ops.py",
+    "kernels/counting_sort/ops.py",
+    "kernels/merge/ops.py",
+    "kernels/radix_sort/ops.py",
+    "kernels/segment_sum/ops.py",
+    "kernels/spmv/ops.py",
+    "kernels/spmv_sym/ops.py",
+    "sparse/dispatch.py",
+)
+
+#: module-level constant names that must live in the tuning registry.
+_CAP_NAME_RE = re.compile(
+    r"(RESIDENT|BUDGET|MAX_BYTES$|_COST$|_MAX_BITS$|^BLOCK_[BRT]$)"
+)
+
+#: knob keywords whose literal defaults the registry owns.
+_KNOB_ARGS = frozenset({"block_b", "block_t", "block_r", "max_bits"})
+
+
+def validate_tuning_table(table=None):
+    """Check every table entry against the registered kernel specs.
+
+    Raises :class:`InvariantViolation` with invariant
+    ``tuning-unknown-family`` / ``tuning-unknown-knob`` /
+    ``tuning-bad-value``; returns the number of entries checked.
+    """
+    from .. import tuning
+
+    if table is None:
+        table = tuning.get_table()
+    checked = 0
+    for entry in table.entries():
+        family = entry.get("family")
+        backend = entry.get("backend")
+        subject = f"tuning[{family}@{backend}]"
+        try:
+            spec = tuning.kernel_spec(family)
+        except KeyError:
+            raise InvariantViolation(
+                "tuning-unknown-family",
+                f"entry names unregistered family {family!r}",
+                subject=subject,
+            ) from None
+        known = set(spec.knob_names())
+        for name, value in entry.get("policy", {}).items():
+            if name not in known:
+                raise InvariantViolation(
+                    "tuning-unknown-knob",
+                    f"knob {name!r} is not declared by the "
+                    f"{family!r} spec (knows {sorted(known)})",
+                    subject=subject,
+                )
+            prior = spec.knob(name).prior(backend or "cpu")
+            ok = (
+                isinstance(value, (int, float))
+                and not isinstance(value, bool)
+                if isinstance(prior, (int, float))
+                else isinstance(value, type(prior))
+            )
+            if not ok:
+                raise InvariantViolation(
+                    "tuning-bad-value",
+                    f"knob {name!r} holds {value!r} "
+                    f"({type(value).__name__}), prior is {prior!r}",
+                    subject=subject,
+                )
+            if isinstance(value, (int, float)) and not isinstance(
+                value, bool
+            ) and value <= 0 and name != "launch_cost":
+                raise InvariantViolation(
+                    "tuning-bad-value",
+                    f"knob {name!r} holds non-positive {value!r}",
+                    subject=subject,
+                )
+        checked += 1
+    return checked
+
+
+def _is_numeric_literal(node: ast.expr) -> bool:
+    """True for ``1024``, ``8 << 20``, ``-5``, ``3 * 1024`` etc."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) and not isinstance(
+            node.value, bool
+        )
+    if isinstance(node, ast.UnaryOp):
+        return _is_numeric_literal(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_numeric_literal(node.left) and _is_numeric_literal(
+            node.right
+        )
+    return False
+
+
+class _ConstantVisitor(ast.NodeVisitor):
+    def __init__(self, path: Path):
+        self.path = path
+        self.findings: list[dict] = []
+
+    def _flag(self, node: ast.AST, name: str, reason: str) -> None:
+        self.findings.append(
+            {
+                "file": str(self.path),
+                "line": node.lineno,
+                "name": name,
+                "reason": reason,
+            }
+        )
+
+    def visit_Module(self, node: ast.Module) -> None:
+        for stmt in node.body:
+            targets = []
+            value = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign):
+                targets, value = [stmt.target], stmt.value
+            for t in targets:
+                if (
+                    isinstance(t, ast.Name)
+                    and _CAP_NAME_RE.search(t.id)
+                    and value is not None
+                    and _is_numeric_literal(value)
+                ):
+                    self._flag(
+                        stmt,
+                        t.id,
+                        f"module constant {t.id!r} holds a numeric "
+                        "literal — register it as a tuning knob (or "
+                        "alias the registry value) instead",
+                    )
+        self.generic_visit(node)
+
+    def _visit_func(self, node) -> None:
+        a = node.args
+        pairs = list(
+            zip(a.args[len(a.args) - len(a.defaults):], a.defaults)
+        ) + [
+            (arg, d)
+            for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+            if d is not None
+        ]
+        for arg, default in pairs:
+            if arg.arg in _KNOB_ARGS and _is_numeric_literal(default):
+                self._flag(
+                    default,
+                    arg.arg,
+                    f"{node.name}() defaults knob {arg.arg!r} to a "
+                    "numeric literal — default to None and resolve "
+                    "through repro.sparse.tuning",
+                )
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+def lint_tuning_constants(paths=None) -> list[dict]:
+    """Lint the policy-consuming layer; finding dicts (empty = clean)."""
+    if paths is None:
+        base = Path(__file__).resolve().parent.parent.parent
+        paths = [base / rel for rel in DEFAULT_TUNING_LINT_PATHS]
+    findings: list[dict] = []
+    for path in map(Path, paths):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        visitor = _ConstantVisitor(path)
+        visitor.visit(tree)
+        findings.extend(visitor.findings)
+    return findings
+
+
+def format_tuning_findings(findings: list[dict]) -> str:
+    if not findings:
+        return "tuning lint: clean"
+    return "\n".join(
+        f"{f['file']}:{f['line']}: {f['reason']}" for f in findings
+    )

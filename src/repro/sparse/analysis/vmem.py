@@ -1,15 +1,15 @@
 """Pallas VMEM budget lint: the pass/fallback frontier as a table.
 
 Every kernel family guards its Pallas path with a static residency
-check against the shared 8 MB cap
-(:data:`repro.kernels.segment_sum.ops.FUSED_RESIDENT_MAX_BYTES`); past
-the cap the XLA fallback runs instead.  Those decisions are pure
-functions of static shapes, so there is no reason to discover them at
-runtime: each family exports a ``*_vmem_spec`` helper mirroring its
-guard bit-for-bit, and this module sweeps them over a representative
-shape grid into one report — the table the ROADMAP item-3 autotuner
-will consume when it starts mutating tile sizes and residency
-thresholds.
+check against the registry-owned budget
+(:data:`repro.sparse.tuning.RESIDENT_BUDGET_BYTES`, resolved per call
+through the tuning table); past the cap the XLA fallback runs instead.
+Those decisions are pure functions of static shapes, so there is no
+reason to discover them at runtime: each family exports a
+``*_vmem_spec`` helper mirroring its guard bit-for-bit, and this
+module sweeps them over a representative shape grid into one report —
+the seed table ``python -m repro.sparse.tuning --prior-only`` consumes
+(and CI asserts it consumed every row of).
 
 Row schema (one dict per (family, shape) point)::
 

@@ -42,6 +42,7 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from . import tuning
 from .errors import FallbackWarning
 
 PermFn = Callable[..., jax.Array]
@@ -50,13 +51,16 @@ _METHODS: Dict[str, PermFn] = {}
 
 #: the production (TPU) planning backend — what ``method=None``
 #: resolves to on accelerator backends where the Pallas kernels compile
-#: natively.
-DEFAULT_METHOD_TPU = "radix"
+#: natively.  The value is owned by the ``plan`` tuning spec; these
+#: names are kept as the documented prior pins.
+DEFAULT_METHOD_TPU = tuning.prior_value("plan", "method", backend="tpu")
 #: the off-TPU default: Pallas runs in interpret mode there, so the
 #: fused-key XLA sort is the fastest correct choice (it widens to int64
 #: under x64 and only warns+falls back to two passes in the
 #: overflow-without-x64 corner).
-DEFAULT_METHOD_INTERPRET = "fused"
+DEFAULT_METHOD_INTERPRET = tuning.prior_value(
+    "plan", "method", backend="cpu"
+)
 
 
 def register_method(name: str, fn: PermFn) -> None:
@@ -69,10 +73,14 @@ def available_methods() -> tuple[str, ...]:
 
 
 def default_method() -> str:
-    """The backend used when callers pass ``method=None`` (backend-aware:
-    ``"radix"`` on TPU, ``"fused"`` where Pallas would interpret)."""
-    return DEFAULT_METHOD_TPU if jax.default_backend() == "tpu" \
-        else DEFAULT_METHOD_INTERPRET
+    """The backend used when callers pass ``method=None``.
+
+    Resolved through the tuning table (family ``"plan"``): the priors
+    are backend-aware — ``"radix"`` on TPU, ``"fused"`` where Pallas
+    would interpret — and a measured tune can overwrite them per
+    (backend, shape bucket).
+    """
+    return str(tuning.resolve_policy("plan")["method"])
 
 
 def resolve_method(method: str | None) -> str:
@@ -162,7 +170,8 @@ def _perm_fused(rows, cols, *, M: int, N: int) -> jax.Array:
 
 
 def _perm_pallas(rows, cols, *, M: int, N: int,
-                 block_b: int = 1024, interpret: bool | None = None
+                 block_b: int | None = None,
+                 interpret: bool | None = None
                  ) -> jax.Array:
     """Pallas counting-sort kernels (imported lazily: no hard kernel dep)."""
     from ..kernels.counting_sort.ops import counting_sort
@@ -176,7 +185,7 @@ def _perm_pallas(rows, cols, *, M: int, N: int,
     return rank[rank2]
 
 
-def _perm_radix(rows, cols, *, M: int, N: int, block_b: int = 4096,
+def _perm_radix(rows, cols, *, M: int, N: int, block_b: int | None = None,
                 max_bits: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """Pallas LSD radix-partition planner (lazy import, as above)."""
@@ -199,11 +208,14 @@ register_method("radix", _perm_radix)
 # ---------------------------------------------------------------------------
 _MERGE_METHODS: Dict[str, PermFn] = {}
 
-#: merge backend ``merge_method=None`` resolves to on TPU.
-DEFAULT_MERGE_TPU = "pallas"
+#: merge backend ``merge_method=None`` resolves to on TPU (prior pin,
+#: owned by the ``merge`` tuning spec).
+DEFAULT_MERGE_TPU = tuning.prior_value("merge", "method", backend="tpu")
 #: off-TPU merge default: the Pallas search would run in interpret
 #: mode, so the pure-jnp binary search wins (bit-identical by contract).
-DEFAULT_MERGE_INTERPRET = "jnp"
+DEFAULT_MERGE_INTERPRET = tuning.prior_value(
+    "merge", "method", backend="cpu"
+)
 
 
 def register_merge_method(name: str, fn: PermFn) -> None:
@@ -217,9 +229,9 @@ def available_merge_methods() -> tuple[str, ...]:
 
 
 def default_merge_method() -> str:
-    """Backend used when callers pass ``merge_method=None``."""
-    return DEFAULT_MERGE_TPU if jax.default_backend() == "tpu" \
-        else DEFAULT_MERGE_INTERPRET
+    """Backend used when callers pass ``merge_method=None`` (resolved
+    through the tuning table, family ``"merge"``)."""
+    return str(tuning.resolve_policy("merge")["method"])
 
 
 def resolve_merge_method(method: str | None) -> str:
@@ -256,7 +268,8 @@ def _merge_jnp(q_rows, q_cols, t_rows, t_cols, *, side="left"):
 
 
 def _merge_pallas(q_rows, q_cols, t_rows, t_cols, *, side="left",
-                  block_b: int = 65536, interpret: bool | None = None):
+                  block_b: int | None = None,
+                  interpret: bool | None = None):
     """Residency-guarded Pallas search (falls back to jnp past budget)."""
     from ..kernels.merge.ops import merge_search as _pallas_search
 

@@ -73,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.csc import CSC
+from . import tuning
 from .analysis.invariants import maybe_validate_pattern, validate_pattern
 from .errors import CacheCorruptionWarning, InvariantViolation
 from .formats import convert
@@ -357,6 +358,7 @@ class PlanService:
         self.cache_dir = None
         self.loaded_plans = 0
         self.loaded_products = 0
+        self.loaded_tuning_entries = 0
         if cache_dir is not None:
             self.cache_dir = Path(cache_dir)
             self.cache_dir.mkdir(parents=True, exist_ok=True)
@@ -364,6 +366,14 @@ class PlanService:
             self.loaded_plans, self.loaded_products = load_caches(
                 self.cache_dir
             )
+            # measured tuning table persists alongside the plan caches:
+            # a restarted server resumes with the same policies (and
+            # therefore the same AOT executable keys) it tuned before.
+            table_path = self.cache_dir / tuning.TABLE_FILENAME
+            if table_path.is_file():
+                self.loaded_tuning_entries = tuning.get_table().load(
+                    table_path
+                )
 
     # -- persistence -------------------------------------------------------
     def _persist(self, kind: str, key, value) -> None:
@@ -385,9 +395,13 @@ class PlanService:
             )
 
     def save(self) -> int:
-        """Flush every in-memory plan/product entry to ``cache_dir``."""
+        """Flush every in-memory plan/product entry to ``cache_dir``
+        (plus the tuning table when it holds measured entries)."""
         if self.cache_dir is None:
             raise ValueError("PlanService has no cache_dir to save into")
+        table = tuning.get_table()
+        if len(table):
+            table.save(self.cache_dir / tuning.TABLE_FILENAME)
         return save_caches(self.cache_dir)
 
     def _retire_persisted(self, old_key, old_structure_key) -> None:
@@ -424,7 +438,12 @@ class PlanService:
 
     # -- AOT executable tier ----------------------------------------------
     def _aot(self, ekey, build):
-        return self._execs.get_or_create(ekey, build)
+        # the tuning fingerprint is folded into every executable key:
+        # a re-tune (new measured table) retires stale executables
+        # lowered under the old policy instead of replaying them.
+        return self._execs.get_or_create(
+            ekey + (tuning.tuning_fingerprint(),), build
+        )
 
     def _fill_executable(self, key, pat: SparsePattern, vals_shape,
                          vals_dtype, batch: int | None = None):
@@ -649,6 +668,8 @@ class PlanService:
             "exec": self._execs.info(),
             "loaded_plans": self.loaded_plans,
             "loaded_products": self.loaded_products,
+            "loaded_tuning_entries": self.loaded_tuning_entries,
+            "tuning_fingerprint": tuning.tuning_fingerprint(),
             "persisted": len(self._persisted),
             "cache_dir": None if self.cache_dir is None
             else str(self.cache_dir),

@@ -1,0 +1,236 @@
+"""The autotuner CLI: ``python -m repro.sparse.tuning``.
+
+Two modes:
+
+* ``--prior-only`` (CI mode, no measurement): resolve every registered
+  family's policy from the static priors, consume a ``vmem_report()``
+  JSON artifact (``--vmem-report``) row by row — each row's budget must
+  match the policy the registry resolves for that family, proving the
+  report and the dispatch layer share one source of truth — and write
+  the resolved table (``--json``).  Exits non-zero on any unconsumed
+  or mismatched row.
+* ``--measure``: benchmark candidate policies per family on the
+  current backend (Table-4.1 set 1 at ``--scale``) and *record* every
+  winner that beats its prior by more than ``--min-gain`` into the
+  tuning table, persisted to ``--cache-dir`` (default:
+  ``$REPRO_TUNING_CACHE_DIR``).  A recorded policy is consulted by
+  every subsequent ``resolve_policy`` call in processes pointing at
+  the same cache dir.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import (
+    TABLE_FILENAME,
+    _default_backend,
+    default_cache_path,
+    get_table,
+    kernel_spec,
+    prior_policy,
+    registered_families,
+    resolve_policy,
+)
+
+#: vmem-report row family -> tuning registry family.
+VMEM_FAMILY_MAP = {
+    "fill_fused": "segment_sum",
+    "spgemm_fused": "segment_sum",
+    "merge_search": "merge",
+    "radix_sort": "radix_sort",
+    "spmv_sym": "spmv_sym",
+    "spmv_bsr": "spmv_sym",
+}
+
+
+def _expected_budget(family: str, row: dict) -> int:
+    """The budget the registry resolves for one vmem-report row."""
+    params = row.get("params", {})
+    if family == "radix_sort":
+        from ...kernels.common import LANES, round_up
+
+        pol = resolve_policy(
+            family,
+            M=params.get("M"), N=params.get("N"), L=params.get("L"),
+        )
+        return round_up(1 << int(pol["max_bits"]), LANES) * 4
+    pol = resolve_policy(
+        family,
+        M=params.get("M"), N=params.get("N"),
+        L=params.get("L", params.get("n_targets")),
+        dtype=params.get("dtype"),
+    )
+    return int(pol["resident_max_bytes"])
+
+
+def consume_vmem_report(path) -> tuple[int, list[str]]:
+    """Check every report row against the resolved policies.
+
+    Returns ``(consumed_rows, failures)``; a row fails when its family
+    has no registry mapping or its budget diverges from the policy the
+    registry resolves for the same shape point.
+    """
+    with open(path) as fh:
+        rows = json.load(fh)["vmem_report"]
+    failures: list[str] = []
+    consumed = 0
+    for row in rows:
+        fam = VMEM_FAMILY_MAP.get(row.get("family"))
+        if fam is None:
+            failures.append(
+                f"unconsumed vmem row: unmapped family {row.get('family')!r}"
+            )
+            continue
+        want = _expected_budget(fam, row)
+        got = int(row["budget_bytes"])
+        if got != want:
+            failures.append(
+                f"vmem row {row['family']} {row.get('params')}: report "
+                f"budget {got} != resolved policy budget {want}"
+            )
+            continue
+        consumed += 1
+    return consumed, failures
+
+
+def _artifact(consumed_rows: int | None = None) -> dict:
+    table = get_table()
+    backend = _default_backend()
+    return {
+        "schema": 1,
+        "backend": backend,
+        "fingerprint": table.fingerprint(),
+        "priors": {
+            fam: prior_policy(fam, backend)
+            for fam in registered_families()
+        },
+        "resolved": {
+            fam: resolve_policy(fam) for fam in registered_families()
+        },
+        "entries": table.entries(),
+        "consumed_vmem_rows": consumed_rows,
+    }
+
+
+def _measure(families, scale: float, min_gain: float) -> list[dict]:
+    from .measure import (
+        MEASURABLE_FAMILIES,
+        candidate_policies,
+        make_dataset,
+        time_policy,
+    )
+
+    families = families or MEASURABLE_FAMILIES
+    backend = _default_backend()
+    data = make_dataset(scale=scale)
+    table = get_table()
+    results = []
+    for fam in families:
+        if fam not in MEASURABLE_FAMILIES:
+            print(f"{fam}: no measurer, skipped", file=sys.stderr)
+            continue
+        cands = candidate_policies(fam, backend)
+        prior = cands[0]
+        timed = []
+        for pol in cands:
+            us = time_policy(fam, pol, data)
+            timed.append((us, pol))
+            print(f"{fam}: {pol} -> {us:.1f}us")
+        prior_us = timed[0][0]
+        best_us, best = min(timed, key=lambda t: t[0])
+        gain = prior_us / best_us - 1.0 if best_us > 0 else 0.0
+        recorded = False
+        if best != prior and gain > min_gain:
+            table.record(
+                fam, best, backend=backend,
+                M=data["M"], N=data["N"], L=data["L"],
+            )
+            recorded = True
+        results.append({
+            "family": fam, "prior": prior, "prior_us": prior_us,
+            "best": best, "best_us": best_us,
+            "gain": round(gain, 4), "recorded": recorded,
+        })
+        verdict = "recorded" if recorded else "prior kept"
+        print(f"{fam}: best {best} ({best_us:.1f}us vs prior "
+              f"{prior_us:.1f}us, gain {gain * 100:.1f}%) -> {verdict}")
+    return results
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.sparse.tuning",
+        description="measured autotuner for the sparse kernel policies",
+    )
+    mode = parser.add_mutually_exclusive_group()
+    mode.add_argument(
+        "--prior-only", action="store_true",
+        help="resolve priors without measuring (CI artifact mode)",
+    )
+    mode.add_argument(
+        "--measure", action="store_true",
+        help="benchmark candidates and record measured winners",
+    )
+    parser.add_argument(
+        "--families", nargs="*", default=None,
+        help="restrict measurement to these families",
+    )
+    parser.add_argument("--scale", type=float, default=0.1)
+    parser.add_argument(
+        "--min-gain", type=float, default=0.02,
+        help="fractional speedup a candidate must beat the prior by",
+    )
+    parser.add_argument(
+        "--vmem-report", metavar="PATH",
+        help="vmem_report() JSON to consume (prior-only mode)",
+    )
+    parser.add_argument(
+        "--json", metavar="PATH",
+        help="write the resolved-table artifact here",
+    )
+    parser.add_argument(
+        "--cache-dir", metavar="DIR",
+        help="persist the measured table to DIR/" + TABLE_FILENAME,
+    )
+    args = parser.parse_args(argv)
+
+    failures: list[str] = []
+    consumed = None
+    if args.measure:
+        _measure(args.families, args.scale, args.min_gain)
+    if args.vmem_report:
+        consumed, bad = consume_vmem_report(args.vmem_report)
+        failures += bad
+        print(f"vmem report: {consumed} rows consumed against the "
+              "resolved policies")
+
+    table = get_table()
+    if args.cache_dir:
+        path = Path(args.cache_dir) / TABLE_FILENAME
+        path.parent.mkdir(parents=True, exist_ok=True)
+        table.save(path)
+        print(f"tuning table ({len(table)} measured entries) -> {path}")
+    elif args.measure and len(table):
+        path = default_cache_path()
+        if path is not None:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            table.save(path)
+            print(f"tuning table ({len(table)} measured entries) -> "
+                  f"{path}")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(_artifact(consumed), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"resolved-table artifact -> {args.json}")
+
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,172 @@
+"""Measurement backend of the autotuner: time one policy candidate.
+
+Shared by ``python -m repro.sparse.tuning --measure`` and the
+``tuned-vs-prior`` rows of ``benchmarks/bench_parts.py``: both call
+:func:`time_policy` so the tuner's decisions and the benchmark gate
+measure exactly the same code paths.
+
+Every family measurer runs the *public* op the policy steers — the
+dispatch-layer entry point, not the raw kernel — with the knobs passed
+explicitly, so a candidate's time includes everything the knob changes
+(grid shape, residency fallback, sort backend).  Values are medians of
+wall-clock repeats after warmup, in microseconds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import kernel_spec, prior_policy
+
+__all__ = [
+    "MEASURABLE_FAMILIES",
+    "candidate_policies",
+    "make_dataset",
+    "time_policy",
+]
+
+#: families the measurement harness covers (the ``plan`` pseudo-family
+#: steers dispatch; the rest are kernel families).
+MEASURABLE_FAMILIES = (
+    "plan",
+    "radix_sort",
+    "segment_sum",
+    "merge",
+    "spmv",
+)
+
+
+def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def make_dataset(scale: float = 0.1, seed: int = 7) -> dict:
+    """One Table-4.1 set-1 problem instance, prepared for every family.
+
+    Returns the raw triplet stream, the planned pattern (for the
+    numeric-phase families) and the padded-ELL form (for SpMV), all as
+    device arrays, plus the integer dimensions.
+    """
+    import jax.numpy as jnp
+
+    from ...core.ransparse import dataset
+    from ..pattern import plan
+
+    ii, jj, _ss, siz = dataset(1, seed=seed, scale=scale)
+    rows = jnp.asarray(ii - 1, jnp.int32)
+    cols = jnp.asarray(jj - 1, jnp.int32)
+    M = N = int(siz)
+    L = int(rows.shape[0])
+    pat = plan(rows, cols, (M, N))
+    vals = jnp.ones((L,), jnp.float32)
+    A = pat.assemble(vals)
+    counts = np.bincount(
+        np.asarray(A.indices)[np.asarray(A.indices) < M], minlength=M
+    )
+    max_per_row = max(int(counts.max()), 1)
+    from ...kernels.spmv.ops import csc_to_ell
+
+    ell_cols, ell_vals, _overflow = csc_to_ell(
+        A, max_per_row=max_per_row
+    )
+    x = jnp.ones((N,), jnp.float32)
+    half = L // 2
+    return {
+        "rows": rows, "cols": cols, "M": M, "N": N, "L": L,
+        "pattern": pat, "vals": vals,
+        "ell_cols": ell_cols, "ell_vals": ell_vals, "x": x,
+        "q_rows": rows[:half], "q_cols": cols[:half],
+        "t_rows": rows[half:], "t_cols": cols[half:],
+    }
+
+
+def time_policy(family: str, policy: dict, data: dict, *,
+                warmup: int = 1, iters: int = 3) -> float:
+    """Wall time (us, median) of ``family``'s op under ``policy``."""
+    timer = dict(warmup=warmup, iters=iters)
+    if family == "plan":
+        from ..dispatch import sorted_permutation
+
+        return _time_fn(
+            lambda: sorted_permutation(
+                data["rows"], data["cols"], M=data["M"], N=data["N"],
+                method=str(policy["method"]),
+            ),
+            **timer,
+        )
+    if family == "radix_sort":
+        from ...kernels.radix_sort.ops import radix_sort_pair
+
+        return _time_fn(
+            lambda: radix_sort_pair(
+                data["rows"], data["cols"], M=data["M"], N=data["N"],
+                block_b=int(policy["block_b"]),
+                block_t=int(policy["block_t"]),
+                max_bits=int(policy["max_bits"]),
+            ),
+            **timer,
+        )
+    if family == "segment_sum":
+        from ...kernels.segment_sum.ops import gather_segment_sum_sorted
+
+        pat = data["pattern"]
+        return _time_fn(
+            lambda: gather_segment_sum_sorted(
+                data["vals"], pat.perm, pat.slot,
+                num_segments=pat.nzmax,
+                block_b=int(policy["block_b"]),
+            ),
+            **timer,
+        )
+    if family == "merge":
+        from ..dispatch import merge_search
+
+        kwargs = {}
+        if str(policy["method"]) == "pallas":
+            kwargs["block_b"] = int(policy["block_b"])
+        return _time_fn(
+            lambda: merge_search(
+                data["q_rows"], data["q_cols"],
+                data["t_rows"], data["t_cols"],
+                side="left", method=str(policy["method"]), **kwargs,
+            ),
+            **timer,
+        )
+    if family == "spmv":
+        from ...kernels.spmv.ops import spmv
+
+        return _time_fn(
+            lambda: spmv(
+                data["ell_cols"], data["ell_vals"], data["x"],
+                block_r=int(policy["block_r"]),
+            ),
+            **timer,
+        )
+    raise ValueError(f"no measurer for family {family!r}")
+
+
+def candidate_policies(family: str, backend: str | None = None) -> list:
+    """Prior-anchored candidate grid: the prior itself, then each knob
+    swept over its declared candidates with the others held at prior.
+    """
+    spec = kernel_spec(family)
+    prior = prior_policy(family, backend)
+    out = [dict(prior)]
+    for knob in spec.knobs:
+        for cand in knob.candidates:
+            pol = dict(prior, **{knob.name: cand})
+            if pol not in out:
+                out.append(pol)
+    return out
